@@ -1,0 +1,33 @@
+"""Paper Fig. 7/8: workload-average runtimes per placement method."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def summarize(per_query: dict) -> dict:
+    ms = [r["ms"] for r in per_query.values()]
+    return {"ms": float(np.mean(ms)), "n_gathers":
+            int(sum(r["n_gathers"] for r in per_query.values())),
+            "n_solutions": int(sum(r["n_solutions"]
+                                   for r in per_query.values()))}
+
+
+def run() -> dict:
+    from benchmarks import bench_bsbm, bench_lubm
+    out = {}
+    lub = bench_lubm.run()
+    bsb = bench_bsbm.run()
+    for label in ("wawpart", "random", "centralized"):
+        out[f"lubm/{label}"] = summarize(lub[label])
+        out[f"bsbm/{label}"] = summarize(bsb[label])
+    return out
+
+
+def main() -> None:
+    for name, r in run().items():
+        print(f"averages/{name},{r['ms'] * 1e3:.1f},"
+              f"n_gathers={r['n_gathers']}")
+
+
+if __name__ == "__main__":
+    main()

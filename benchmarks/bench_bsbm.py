@@ -1,0 +1,34 @@
+"""Paper Fig. 6: per-query BSBM runtimes — WawPart vs Random vs Centralized."""
+from __future__ import annotations
+
+
+def run(n_products: int = 250, iters: int = 2) -> dict:
+    from repro.core.partitioner import (centralized_partition,
+                                        random_partition, wawpart_partition)
+    from repro.kg.generator import generate_bsbm
+    from repro.kg.workloads import bsbm_queries
+    from benchmarks.harness import bench_workload
+
+    store = generate_bsbm(n_products, seed=0)
+    queries = bsbm_queries()
+    out = {}
+    for label, part in [
+        ("wawpart", wawpart_partition(store, queries, n_shards=3)),
+        ("random", random_partition(store, queries, n_shards=3, seed=0)),
+        ("centralized", centralized_partition(store, queries)),
+    ]:
+        out[label] = bench_workload(store, queries, part, iters=iters)
+    out["_meta"] = {"n_triples": len(store), "figure": "Fig.6"}
+    return out
+
+
+def main() -> None:
+    from benchmarks.harness import emit_csv
+    res = run()
+    for label in ("wawpart", "random", "centralized"):
+        emit_csv(f"bsbm/{label}", res[label],
+                 extra_cols=("n_gathers", "n_solutions"))
+
+
+if __name__ == "__main__":
+    main()

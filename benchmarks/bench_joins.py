@@ -1,0 +1,33 @@
+"""The paper's objective function measured directly: distributed-join counts
+and estimated cross-shard traffic per placement (§3.2)."""
+from __future__ import annotations
+
+
+def run() -> dict:
+    from repro.core.partitioner import (random_partition, wawpart_partition,
+                                        workload_join_stats)
+    from repro.kg.generator import generate_bsbm, generate_lubm
+    from repro.kg.workloads import bsbm_queries, lubm_queries
+
+    out = {}
+    for name, store, qs in [
+        ("lubm", generate_lubm(1, scale=0.5, seed=0), lubm_queries()),
+        ("bsbm", generate_bsbm(300, seed=0), bsbm_queries()),
+    ]:
+        ww = workload_join_stats(qs, wawpart_partition(store, qs, n_shards=3))
+        rnd = workload_join_stats(qs, random_partition(store, qs, n_shards=3,
+                                                       seed=0))
+        out[name] = {"wawpart": ww, "random": rnd}
+    return out
+
+
+def main() -> None:
+    for name, r in run().items():
+        for method in ("wawpart", "random"):
+            s = r[method]
+            print(f"joins/{name}/{method},{s['distributed']},"
+                  f"local={s['local']};traffic={s['traffic']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 5: per-query LUBM runtimes — WawPart vs Random Partition vs
+Local Centralized (wall-clock of the jitted engine on this host)."""
+from __future__ import annotations
+
+
+def run(scale: float = 0.35, iters: int = 2) -> dict:
+    from repro.core.partitioner import (centralized_partition,
+                                        random_partition, wawpart_partition)
+    from repro.kg.generator import generate_lubm
+    from repro.kg.workloads import lubm_queries
+    from benchmarks.harness import bench_workload
+
+    store = generate_lubm(1, scale=scale, seed=0)
+    queries = lubm_queries()
+    out = {}
+    for label, part in [
+        ("wawpart", wawpart_partition(store, queries, n_shards=3)),
+        ("random", random_partition(store, queries, n_shards=3, seed=0)),
+        ("centralized", centralized_partition(store, queries)),
+    ]:
+        out[label] = bench_workload(store, queries, part, iters=iters)
+    out["_meta"] = {"n_triples": len(store), "figure": "Fig.5"}
+    return out
+
+
+def main() -> None:
+    from benchmarks.harness import emit_csv
+    res = run()
+    for label in ("wawpart", "random", "centralized"):
+        emit_csv(f"lubm/{label}", res[label],
+                 extra_cols=("n_gathers", "n_solutions"))
+
+
+if __name__ == "__main__":
+    main()

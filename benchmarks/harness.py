@@ -1,0 +1,53 @@
+"""Shared benchmark harness: wall-time measurement of jitted query plans."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.engine.federated import ShardedKG, make_engine
+from repro.engine.planner import make_plan
+
+
+def time_query(plan, kg: ShardedKG, *, join_impl="sorted", max_per_row=256,
+               iters: int = 3) -> dict:
+    """Compile once, then report best-of-iters wall time in ms."""
+    import jax.numpy as jnp
+    engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row)
+    fn = jax.jit(jax.vmap(engine, in_axes=(0, 0, None), axis_name="shards"))
+    tr = jnp.asarray(kg.triples)
+    va = jnp.asarray(kg.valid)
+    params = jnp.zeros((max(1, plan.n_params),), jnp.int32)
+    t0 = time.perf_counter()
+    out = fn(tr, va, params)
+    jax.block_until_ready(out)
+    compile_ms = (time.perf_counter() - t0) * 1e3
+    best = np.inf
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(tr, va, params)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    n = int(np.asarray(out[1][plan.ppn]).sum())
+    return {"ms": best, "compile_ms": compile_ms, "n_solutions": n,
+            "n_gathers": plan.n_gathers}
+
+
+def bench_workload(store, queries, partitioning, *, join_impl="sorted",
+                   max_per_row=256, iters=3) -> dict:
+    kg = ShardedKG.build(partitioning)
+    rows = {}
+    for q in queries:
+        plan = make_plan(q, partitioning)
+        rows[q.name] = time_query(plan, kg, join_impl=join_impl,
+                                  max_per_row=max_per_row, iters=iters)
+    return rows
+
+
+def emit_csv(name: str, rows: dict, extra_cols=()) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+    contract)."""
+    for qname, r in rows.items():
+        derived = ";".join(f"{k}={r[k]}" for k in extra_cols if k in r)
+        print(f"{name}/{qname},{r['ms'] * 1e3:.1f},{derived}")

@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md tables from results/*.jsonl (roofline + engine)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import load_rows, roofline_row, wire_bytes
+
+
+def roofline_markdown(path="results/dryrun.jsonl") -> str:
+    rows = load_rows(path)
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | peak GB | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         str(r["mesh"]))):
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR: {r['error'][:60]} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['peak_gb']:.1f} "
+            f"| {'Y' if r['fits_16gb'] else 'N'} |")
+    return "\n".join(out)
+
+
+def engine_markdown(path="results/engine_dryrun.jsonl") -> str:
+    if not os.path.exists(path):
+        return "(engine dry-run not yet recorded)"
+    rows = [json.loads(l) for l in open(path)]
+    agg: dict = {}
+    for r in rows:
+        if r.get("mesh") != "16x16":
+            continue
+        method = r["arch"].split("-")[-1]
+        a = agg.setdefault(method, {"queries": 0, "federated": 0,
+                                    "gathers": 0, "bytes": 0.0})
+        a["queries"] += 1
+        a["federated"] += 1 if r["n_gathers"] > 0 else 0
+        a["gathers"] += r["n_gathers"]
+        a["bytes"] += r["collectives"]["total_bytes"]
+    out = ["| placement | queries | federated | gather ops | "
+           "collective bytes/workload |", "|---|---|---|---|---|"]
+    for m, a in sorted(agg.items()):
+        out.append(f"| {m} | {a['queries']} | {a['federated']} "
+                   f"| {a['gathers']} | {a['bytes']:.3e} |")
+    return "\n".join(out)
+
+
+def perf_before_after() -> str:
+    pairs = []
+    base = {}
+    if os.path.exists("results/dryrun_baseline.jsonl"):
+        for l in open("results/dryrun_baseline.jsonl"):
+            r = json.loads(l)
+            base[(r["arch"], r["shape"])] = roofline_row(r)
+    after = {}
+    if os.path.exists("results/dryrun.jsonl"):
+        for r in load_rows("results/dryrun.jsonl"):
+            if "error" not in r and r["mesh"] == "16x16":
+                after[(r["arch"], r["shape"])] = r
+    out = ["| cell | variant | compute s | memory s | collective s | "
+           "peak GB | dominant |", "|---|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        b, a = base[key], after.get(key)
+        out.append(f"| {key[0]} × {key[1]} | paper-faithful/naive "
+                   f"| {b['compute_s']:.3e} | {b['memory_s']:.3e} "
+                   f"| {b['collective_s']:.3e} | {b['peak_gb']:.1f} "
+                   f"| {b['dominant']} |")
+        if a:
+            out.append(f"| | optimized | {a['compute_s']:.3e} "
+                       f"| {a['memory_s']:.3e} | {a['collective_s']:.3e} "
+                       f"| {a['peak_gb']:.1f} | {a['dominant']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Roofline\n")
+    print(roofline_markdown())
+    print("\n## Engine\n")
+    print(engine_markdown())
+    print("\n## Before/after\n")
+    print(perf_before_after())

@@ -1,0 +1,105 @@
+"""Roofline derivation (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts (results/dryrun.jsonl).
+
+  compute_term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory_term     = HLO_bytes_per_device / HBM_bw
+  collective_term = wire_bytes_per_device / link_bw
+
+HLO numbers are per-device (the SPMD module is the per-device program);
+dividing per-device work by per-chip peaks is identical to the brief's
+global/(chips x peak) form. LM rows use the trip-count-exact "adjusted"
+accounting (see launch/components.py; XLA counts while-bodies once).
+
+Wire-cost model: XLA:CPU does not run the all-reduce->reduce-scatter pass the
+TPU pipeline runs, so HLO all-reduce bytes are converted to ring wire cost
+2*(n-1)/n * bytes; AG/RS/A2A cost (n-1)/n * bytes; collective-permute 1x.
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def wire_bytes(per_kind: dict, n_shards: float = 16.0) -> float:
+    f = (n_shards - 1) / n_shards
+    return (per_kind.get("all-reduce", 0.0) * 2 * f
+            + per_kind.get("all-gather", 0.0) * f
+            + per_kind.get("reduce-scatter", 0.0) * f
+            + per_kind.get("all-to-all", 0.0) * f
+            + per_kind.get("collective-permute", 0.0))
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if "error" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec.get("mesh"), "error": rec["error"][:120]}
+    adj = rec.get("adjusted")
+    if adj:
+        flops = adj["adjusted"]["flops"]
+        mem_bytes = adj["adjusted"]["bytes"]
+        coll = adj["adjusted"]["collectives"]
+    else:
+        flops = rec["flops"]
+        mem_bytes = rec["bytes_accessed"]
+        coll = rec["collectives"]["per_kind_bytes"]
+    n_chips = rec.get("n_chips", 256)
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_n = wire_bytes(coll) / LINK_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                   key=lambda kv: kv[1])[0]
+    model = rec.get("model_flops", 0.0)
+    ratio = model / (flops * n_chips) if flops else 0.0
+    bound = max(t_c, t_m, t_n)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops": model,
+        "useful_ratio": ratio,
+        "roofline_fraction": (t_c / bound) if bound else 0.0,
+        "peak_gb": (rec.get("peak_bytes_per_device") or 0) / 1e9,
+        "fits_16gb": (rec.get("peak_bytes_per_device") or 0) < 16e9,
+    }
+
+
+def load_rows(path: str = "results/dryrun.jsonl") -> list[dict]:
+    rows = []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            key = (rec.get("arch"), rec.get("shape"), rec.get("mesh"))
+            seen[key] = rec          # last write wins (re-runs override)
+    for rec in seen.values():
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def main() -> None:
+    rows = load_rows()
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         str(r["mesh"]))):
+        if "error" in r:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,"
+                  f"ERROR={r['error']}")
+            continue
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+              f"c={r['compute_s']:.3e};m={r['memory_s']:.3e};"
+              f"n={r['collective_s']:.3e};dom={r['dominant']};"
+              f"frac={r['roofline_fraction']:.2f};"
+              f"useful={r['useful_ratio']:.2f};peakGB={r['peak_gb']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

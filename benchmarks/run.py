@@ -1,0 +1,34 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  Fig.5  LUBM 14-query runtimes (wawpart / random / centralized)
+  Fig.6  BSBM 12-query runtimes
+  Fig.7/8 workload averages
+  §4.1   shard balance
+  §3.2   distributed-join counts + traffic (the objective)
+  §Roofline (if results/dryrun.jsonl exists)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_averages, bench_balance, bench_bsbm,
+                            bench_joins, bench_lubm)
+    print("name,us_per_call,derived")
+    bench_joins.main()
+    bench_balance.main()
+    bench_lubm.main()
+    bench_bsbm.main()
+    bench_averages.main()
+    if os.path.exists("results/dryrun.jsonl"):
+        from benchmarks import roofline
+        roofline.main()
+    else:
+        print("roofline/skipped,0,run launch/dryrun first", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""WawPart beyond the paper: workload-aware EDGE partitioning for distributed
+GNN message passing (DESIGN.md §5).
+
+A knowledge graph IS an edge-typed graph; a GNN layer's aggregation pattern
+is a 'workload' whose features are the edge types it touches. Reusing the
+paper's machinery: each relation type = a P feature; each metapath the model
+aggregates over = a 'query'; WawPart then co-locates relation types that are
+aggregated together, cutting the cross-shard psum bytes of heterogeneous
+message passing vs hash partitioning.
+
+    PYTHONPATH=src python examples/partition_gnn.py
+"""
+import numpy as np
+
+from repro.core.partitioner import (random_partition, wawpart_partition,
+                                    workload_join_stats)
+from repro.kg.generator import generate_lubm
+from repro.kg.query import Query, TriplePattern as T, c, v
+from repro.kg.workloads import lubm_queries  # noqa: F401 (docs pointer)
+
+
+def metapath_workload() -> list[Query]:
+    """Aggregation metapaths of a 2-layer heterogeneous GNN over the academic
+    graph: each is a join of the relations its message path traverses."""
+    return [
+        Query("student-course-teacher", (
+            T(v("s"), c("ub:takesCourse"), v("co")),
+            T(v("f"), c("ub:teacherOf"), v("co")),
+        )),
+        Query("advisor-chain", (
+            T(v("s"), c("ub:advisor"), v("f")),
+            T(v("f"), c("ub:worksFor"), v("d")),
+        )),
+        Query("org-hierarchy", (
+            T(v("g"), c("ub:subOrganizationOf"), v("d")),
+            T(v("d"), c("ub:subOrganizationOf"), v("u")),
+        )),
+        Query("authorship", (
+            T(v("p"), c("ub:publicationAuthor"), v("f")),
+            T(v("f"), c("ub:memberOf"), v("d")),
+        )),
+    ]
+
+
+def main() -> None:
+    graph = generate_lubm(1, scale=0.4, seed=0)
+    workload = metapath_workload()
+    print(f"heterogeneous graph: {len(graph):,} typed edges")
+    ww = wawpart_partition(graph, workload, n_shards=4)
+    rnd = random_partition(graph, workload, n_shards=4, seed=0)
+    sw = workload_join_stats(workload, ww)
+    sr = workload_join_stats(workload, rnd)
+    print(f"wawpart edge shards: {ww.shard_sizes.tolist()} "
+          f"(dev {ww.balance_report()['rel_dev']})")
+    print(f"cross-shard aggregations per GNN layer: "
+          f"wawpart={sw['distributed']} vs hash/random={sr['distributed']}")
+    print(f"estimated cross-shard message traffic: "
+          f"wawpart={sw['traffic']:.0f} vs random={sr['traffic']:.0f} "
+          f"({sr['traffic'] / max(sw['traffic'], 1):.1f}x reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""BSBM engine config (the paper's second evaluation workload)."""
+from repro.configs.lubm import KGEngineConfig
+
+
+def full() -> KGEngineConfig:
+    return KGEngineConfig(name="bsbm", n_universities=0, scale=1.0,
+                          n_shards=3)
+
+
+def smoke() -> KGEngineConfig:
+    return KGEngineConfig(name="bsbm-smoke", n_universities=0, scale=0.2)

@@ -1,0 +1,52 @@
+"""Jaccard distance matrix over workload queries (paper §3.2, Fig. 1).
+
+dist(Qa, Qb) = 1 - |Fa ∩ Fb| / |Fa ∪ Fb| over the queries' feature sets.
+
+Two compute paths:
+  * numpy host path (default for the small Q×Q matrices of the paper),
+  * JAX path over the binary query×feature membership matrix, where the
+    intersection counts are a 0/1 matmul — served by kernels/jaccard on TPU
+    (MXU) and validated against the numpy oracle. For production workloads
+    with 10^4-10^5 distinct queries this matmul is the hot spot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.features import Feature, query_features
+from repro.kg.query import Query
+
+
+def feature_matrix(queries: list[Query]) -> tuple[np.ndarray, list[Feature]]:
+    """Binary membership matrix M[q, f] plus the feature axis ordering."""
+    featsets = [query_features(q) for q in queries]
+    all_feats = sorted(set().union(*featsets)) if featsets else []
+    index = {f: i for i, f in enumerate(all_feats)}
+    m = np.zeros((len(queries), max(1, len(all_feats))), dtype=np.float32)
+    for qi, fs in enumerate(featsets):
+        for f in fs:
+            m[qi, index[f]] = 1.0
+    return m, all_feats
+
+
+def jaccard_distance_from_membership(m: np.ndarray) -> np.ndarray:
+    """Pure-numpy oracle: 1 - |a∩b|/|a∪b| from a binary membership matrix."""
+    m = m.astype(np.float64)
+    inter = m @ m.T
+    counts = m.sum(axis=1)
+    union = counts[:, None] + counts[None, :] - inter
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sim = np.where(union > 0, inter / np.maximum(union, 1e-30), 1.0)
+    # two empty feature sets are identical -> distance 0 (sim forced to 1 above)
+    d = 1.0 - sim
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def jaccard_distance_matrix(queries: list[Query], *, use_kernel: bool = False,
+                            ) -> np.ndarray:
+    m, _ = feature_matrix(queries)
+    if use_kernel:
+        from repro.kernels.jaccard.ops import jaccard_distance  # lazy: pulls in jax
+        return np.asarray(jaccard_distance(m))
+    return jaccard_distance_from_membership(m)

@@ -1,0 +1,370 @@
+"""Knowledge-graph partitioning (paper Algorithm 2) and baselines.
+
+Pipeline: HAC dendrogram -> feature groups at cut -> statistics module scores
+features claimed by several groups (replicated features F_R) and keeps each in
+its best group (no replication) -> balancing module spreads unused features
+F_X (and unclustered leftovers) largest-unit-into-smallest-shard.
+
+Score of a replicated feature r w.r.t. candidate group g (paper line 6-8):
+    S_R  = (p_c*w1 + q_c*w2 + s_c*w3) + (p_t*w4 + q_t*w5 + s_t*w6)
+    score(r, g) = D_OR(r, g)*w7 + S_R(r, g)
+with p = peer features that move together with r, q = queries using r,
+s = data size of r's units, evaluated at shard level (c) and dataset level (t);
+D_OR = number of workload join edges that stay local iff r is placed in g.
+The paper does not publish w1..w7; they default to 1 and live in config.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.distance import jaccard_distance_matrix
+from repro.core.features import (DataUnit, Feature, UnitCatalog,
+                                 build_unit_catalog, pattern_feature,
+                                 query_features)
+from repro.core.hac import cut, linkage_numpy
+from repro.kg.query import Query
+from repro.kg.triples import TripleStore
+
+DEFAULT_WEIGHTS = {f"w{i}": 1.0 for i in range(1, 8)}
+
+
+@dataclass
+class Partitioning:
+    n_shards: int
+    unit_shard: dict[DataUnit, int]
+    catalog: UnitCatalog
+    shard_sizes: np.ndarray
+    method: str = "wawpart"
+    meta: dict = field(default_factory=dict)
+
+    def feature_shards(self, f: Feature) -> frozenset[int]:
+        units = self.catalog.feature_units.get(f)
+        if units is None:  # feature outside the analyzed workload: spans p's units
+            units = tuple(u for u in self.unit_shard if u.p == f.p
+                          and (f.kind == "P" or u.o in (f.o, None)))
+        return frozenset(self.unit_shard[u] for u in units if u in self.unit_shard)
+
+    def assign_triples(self) -> np.ndarray:
+        """Shard id per triple row (every triple exactly once — no replication)."""
+        store = self.catalog.store
+        out = np.full(len(store), -1, dtype=np.int32)
+        for u, s in self.unit_shard.items():
+            rows = self.catalog.rows_of(u)
+            out[rows] = s
+        return out
+
+    def balance_report(self) -> dict:
+        mean = float(self.shard_sizes.mean())
+        dev = (self.shard_sizes - mean) / max(mean, 1.0)
+        return {"sizes": self.shard_sizes.tolist(),
+                "rel_dev": [round(float(x), 4) for x in dev]}
+
+
+# ---------------------------------------------------------------------------
+# statistics module
+# ---------------------------------------------------------------------------
+
+def _query_units(q: Query, cat: UnitCatalog) -> list[tuple[int, frozenset[DataUnit]]]:
+    """Per-pattern unit sets for a query."""
+    out = []
+    for i, pat in enumerate(q.patterns):
+        f = pattern_feature(pat)
+        out.append((i, frozenset(cat.feature_units.get(f, ()))))
+    return out
+
+
+def _local_join_edges(q: Query, cat: UnitCatalog,
+                      unit_of: dict[DataUnit, int]) -> tuple[int, int]:
+    """(local, distributed) join-edge counts for a query under a placement."""
+    pu = dict(_query_units(q, cat))
+    local = dist = 0
+    for i, j, _kind in q.join_edges():
+        shards = {unit_of.get(u, -1) for u in (pu[i] | pu[j])}
+        if len(shards) == 1 and -1 not in shards:
+            local += 1
+        else:
+            dist += 1
+    return local, dist
+
+
+def score_replicated_feature(r: Feature, g: int, groups: dict[int, set[Feature]],
+                             queries: list[Query], cat: UnitCatalog,
+                             weights: dict[str, float]) -> float:
+    qfeats = {q.name: query_features(q) for q in queries}
+    group_feats = groups[g]
+    # peers: features co-occurring with r in some query, present in group g
+    peers_c = {f for q in queries if r in qfeats[q.name]
+               for f in qfeats[q.name] if f != r and f in group_feats}
+    peers_t = {f for q in queries if r in qfeats[q.name]
+               for f in qfeats[q.name] if f != r}
+    q_c = sum(1 for q in queries if r in qfeats[q.name]
+              and qfeats[q.name] & group_feats != set())
+    q_t = sum(1 for q in queries if r in qfeats[q.name])
+    r_size = sum(cat.sizes.get(u, 0) for u in cat.feature_units.get(r, ()))
+    g_size = sum(cat.sizes.get(u, 0) for f in group_feats
+                 for u in cat.feature_units.get(f, ()))
+    t_size = max(1, sum(cat.sizes.values()))
+    s_c = r_size / max(1, g_size)
+    s_t = r_size / t_size
+
+    # D_OR: join edges of workload queries that become local when r sits with g
+    d_or = 0
+    for q in queries:
+        if r not in qfeats[q.name]:
+            continue
+        pu = dict(_query_units(q, cat))
+        r_units = set(cat.feature_units.get(r, ()))
+        g_units = {u for f in group_feats for u in cat.feature_units.get(f, ())}
+        for i, j, _k in q.join_edges():
+            us = pu[i] | pu[j]
+            if us & r_units and us <= (g_units | r_units):
+                d_or += 1
+
+    w = weights
+    s_r = (len(peers_c) * w["w1"] + q_c * w["w2"] + s_c * w["w3"]
+           + len(peers_t) * w["w4"] + q_t * w["w5"] + s_t * w["w6"])
+    return d_or * w["w7"] + s_r
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+def _groups_from_labels(labels: np.ndarray, queries: list[Query],
+                        ) -> dict[int, set[Feature]]:
+    groups: dict[int, set[Feature]] = {}
+    for qi, q in enumerate(queries):
+        groups.setdefault(int(labels[qi]), set()).update(query_features(q))
+    return {i: g for i, (_, g) in enumerate(sorted(groups.items()))}
+
+
+def _resolve_replicated(groups: dict[int, set[Feature]], queries: list[Query],
+                        cat: UnitCatalog, weights: dict[str, float]) -> None:
+    claimed: dict[Feature, list[int]] = {}
+    for g, gf in groups.items():
+        for f in gf:
+            claimed.setdefault(f, []).append(g)
+    for f, gs in sorted((f, gs) for f, gs in claimed.items() if len(gs) > 1):
+        scores = {g: score_replicated_feature(f, g, groups, queries, cat, weights)
+                  for g in gs}
+        keep = max(sorted(scores), key=lambda g: scores[g])
+        for g in gs:
+            if g != keep:
+                groups[g].discard(f)
+
+
+def _place_groups(groups: dict[int, set[Feature]], n_shards: int,
+                  cat: UnitCatalog) -> tuple[dict[DataUnit, int], np.ndarray]:
+    """Pack feature groups into shards (largest mass into emptiest shard),
+    then spread unused units F_X largest-into-smallest (Algorithm 2 ln 16-19)."""
+    group_units: dict[int, set[DataUnit]] = {}
+    taken: set[DataUnit] = set()
+    for g in sorted(groups):
+        us: set[DataUnit] = set()
+        # PO features claim their unit first (more specific than P residues)
+        for f in sorted(groups[g]):
+            for u in cat.feature_units.get(f, ()):
+                if u not in taken:
+                    us.add(u)
+                    taken.add(u)
+        group_units[g] = us
+
+    def gmass(g: int) -> int:
+        return sum(cat.sizes.get(u, 0) for u in group_units[g])
+
+    sizes = np.zeros(n_shards, dtype=np.int64)
+    unit_shard: dict[DataUnit, int] = {}
+    for g in sorted(groups, key=gmass, reverse=True):
+        tgt = int(np.argmin(sizes))
+        for u in group_units[g]:
+            unit_shard[u] = tgt
+        sizes[tgt] += gmass(g)
+
+    fx = [u for u in cat.units if u not in unit_shard]
+    fx = _split_oversized(fx, cat, n_shards)
+    for u in sorted(fx, key=lambda u: -cat.sizes.get(u, 0)):
+        tgt = int(np.argmin(sizes))
+        unit_shard[u] = tgt
+        sizes[tgt] += cat.sizes.get(u, 0)
+    return unit_shard, sizes
+
+
+def _split_oversized(units: list[DataUnit], cat: UnitCatalog,
+                     n_shards: int) -> list[DataUnit]:
+    """Split unused units larger than ~half a balanced shard into hash
+    chunks (they carry no workload joins, so splitting is free)."""
+    total = max(1, sum(cat.sizes.values()))
+    limit = max(1, total // (2 * n_shards))
+    out: list[DataUnit] = []
+    for u in units:
+        size = cat.sizes.get(u, 0)
+        if size <= limit or u.kind == "CHUNK":
+            out.append(u)
+            continue
+        n_chunks = int(np.ceil(size / limit))
+        for ci in range(n_chunks):
+            cu = DataUnit("CHUNK", u.p, u.o, chunk=ci, n_chunks=n_chunks,
+                          base_kind=u.kind)
+            cat.sizes[cu] = int(cat.rows_of(cu).shape[0])
+            out.append(cu)
+    return out
+
+
+def _placement_cost(queries: list[Query], cat: UnitCatalog,
+                    unit_of: dict[DataUnit, int]) -> float:
+    """Workload-wide estimated distributed-join traffic (the paper's objective)."""
+    cost = 0.0
+    for q in queries:
+        pu = dict(_query_units(q, cat))
+        for i, j, _k in q.join_edges():
+            shards = {unit_of.get(x, -1) for x in pu[i] | pu[j]}
+            if len(shards) == 1 and -1 not in shards:
+                continue
+            side_i = sum(cat.sizes.get(x, 0) for x in pu[i])
+            side_j = sum(cat.sizes.get(x, 0) for x in pu[j])
+            cost += float(max(1, min(side_i, side_j)))
+    return cost
+
+
+def wawpart_partition(store: TripleStore, queries: list[Query], *,
+                      n_shards: int = 3, linkage: str = "single",
+                      cut_distance: float | None = None,
+                      weights: dict[str, float] | None = None,
+                      dist_matrix: np.ndarray | None = None,
+                      balance_tol: float = 0.15) -> Partitioning:
+    """Algorithm 2. The dendrogram cut produces m >= n_shards feature groups;
+    replicated features are resolved by score; groups are packed into shards;
+    unused features balance the result. When cut_distance is None, the cut
+    level is auto-selected by the paper's own objective: minimum estimated
+    distributed-join traffic subject to shard balance within tolerance.
+    """
+    weights = {**DEFAULT_WEIGHTS, **(weights or {})}
+    cat = build_unit_catalog(store, queries)
+    n_q = len(queries)
+
+    d = dist_matrix if dist_matrix is not None else jaccard_distance_matrix(queries)
+    z = linkage_numpy(d, linkage)
+
+    if cut_distance is not None:
+        candidate_labels = [cut(z, n_q, distance=cut_distance)]
+    else:  # fewer queries than shards: every cut level, down to singletons
+        candidate_labels = [cut(z, n_q, n_clusters=m)
+                            for m in range(min(n_shards, n_q), n_q + 1)]
+
+    best = None
+    for labels in candidate_labels:
+        groups = _groups_from_labels(labels, queries)
+        _resolve_replicated(groups, queries, cat, weights)
+        unit_shard, sizes = _place_groups(groups, n_shards, cat)
+        _rebalance(queries, cat, unit_shard, sizes, tol=balance_tol)
+        traffic = _placement_cost(queries, cat, unit_shard)
+        mean = sizes.sum() / max(1, n_shards)
+        imbalance = float(np.abs(sizes - mean).max() / max(mean, 1.0))
+        key = (imbalance > balance_tol + 1e-9, traffic, imbalance)
+        if best is None or key < best[0]:
+            best = (key, labels, unit_shard, sizes)
+
+    _key, labels, unit_shard, sizes = best
+    return Partitioning(n_shards, unit_shard, cat, sizes, method="wawpart",
+                        meta={"linkage": linkage, "labels": labels.tolist(),
+                              "z": z.tolist(), "weights": weights})
+
+
+def _unit_move_delta(u: DataUnit, dst: int, queries: list[Query],
+                     cat: UnitCatalog, unit_of: dict[DataUnit, int]) -> float:
+    """Change in estimated distributed-join traffic if unit u moves to dst.
+
+    A join edge's traffic weight is the smaller side's data size (what a
+    federated SERVICE would ship). Negative delta = the move restores
+    locality somewhere.
+    """
+    delta = 0.0
+    for q in queries:
+        pu = dict(_query_units(q, cat))
+        for i, j, _k in q.join_edges():
+            us = pu[i] | pu[j]
+            if u not in us:
+                continue
+            before = {unit_of.get(x, -1) for x in us}
+            after = {dst if x == u else unit_of.get(x, -1) for x in us}
+            was_local = len(before) == 1 and -1 not in before
+            now_local = len(after) == 1 and -1 not in after
+            if was_local == now_local:
+                continue
+            side_i = sum(cat.sizes.get(x, 0) for x in pu[i])
+            side_j = sum(cat.sizes.get(x, 0) for x in pu[j])
+            w = float(max(1, min(side_i, side_j)))
+            delta += w if was_local else -w
+    return delta
+
+
+def _rebalance(queries: list[Query], cat: UnitCatalog,
+               unit_shard: dict[DataUnit, int], sizes: np.ndarray,
+               *, tol: float = 0.15, max_moves: int = 512) -> None:
+    n_shards = sizes.shape[0]
+    if n_shards < 2:
+        return
+    for _ in range(max_moves):
+        mean = sizes.sum() / n_shards
+        src = int(np.argmax(sizes))
+        dst = int(np.argmin(sizes))
+        if sizes[src] <= mean * (1 + tol) or src == dst:
+            return
+        surplus = float(sizes[src] - mean)
+        cands = [u for u, s in unit_shard.items()
+                 if s == src and 0 < cat.sizes.get(u, 0) <= surplus * 2]
+        if not cands:  # only oversized units left: take the smallest mover
+            cands = [u for u, s in unit_shard.items()
+                     if s == src and cat.sizes.get(u, 0) > 0]
+            if not cands:
+                return
+            cands = [min(cands, key=lambda x: cat.sizes[x])]
+        # cheapest traffic delta first; among near-free moves prefer the one
+        # that best fills the deficit
+        deltas = {u: _unit_move_delta(u, dst, queries, cat, unit_shard)
+                  for u in cands}
+        dmin = min(deltas.values())
+        near = [u for u in cands if deltas[u] <= dmin + 1e-9] or cands
+        u = min(near, key=lambda x: abs(cat.sizes[x] - surplus))
+        unit_shard[u] = dst
+        sizes[src] -= cat.sizes[u]
+        sizes[dst] += cat.sizes[u]
+
+
+def random_partition(store: TripleStore, queries: list[Query], *,
+                     n_shards: int = 3, seed: int = 0) -> Partitioning:
+    """Paper baseline: complete per-predicate triple sets randomly assigned."""
+    rng = np.random.default_rng(seed)
+    cat = build_unit_catalog(store, queries)
+    preds = sorted({u.p for u in cat.units})
+    pshard = {p: int(rng.integers(n_shards)) for p in preds}
+    unit_shard = {u: pshard[u.p] for u in cat.units}
+    sizes = np.zeros(n_shards, dtype=np.int64)
+    for u, s in unit_shard.items():
+        sizes[s] += cat.sizes.get(u, 0)
+    return Partitioning(n_shards, unit_shard, cat, sizes, method="random",
+                        meta={"seed": seed})
+
+
+def centralized_partition(store: TripleStore, queries: list[Query]) -> Partitioning:
+    """Everything on one node (the paper's Local/Remote Centralized baselines)."""
+    cat = build_unit_catalog(store, queries)
+    unit_shard = {u: 0 for u in cat.units}
+    sizes = np.array([sum(cat.sizes.values())], dtype=np.int64)
+    return Partitioning(1, unit_shard, cat, sizes, method="centralized")
+
+
+def workload_join_stats(queries: list[Query], part: Partitioning) -> dict:
+    """Workload-level local/distributed join counts + traffic under a placement."""
+    local = dist = 0
+    per_query = {}
+    for q in queries:
+        l, dd = _local_join_edges(q, part.catalog, part.unit_shard)
+        local += l
+        dist += dd
+        per_query[q.name] = {"local": l, "distributed": dd}
+    traffic = _placement_cost(queries, part.catalog, part.unit_shard)
+    return {"local": local, "distributed": dist, "traffic": traffic,
+            "per_query": per_query}

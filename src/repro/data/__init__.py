@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipelines with background prefetch."""
+from repro.data.pipeline import Prefetcher
+
+__all__ = ["Prefetcher"]

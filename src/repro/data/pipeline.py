@@ -1,0 +1,45 @@
+"""Background-prefetching pipeline wrapper (input-side straggler mitigation).
+
+SPMD training is lock-step: a slow input host stalls every chip. The
+Prefetcher keeps a bounded queue filled from a worker thread and exports its
+depth as a metric — the runtime's watchdog flags steps where the queue ran
+dry (input straggler) vs. compute-time anomalies (chip straggler)."""
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class Prefetcher:
+    def __init__(self, iterator, depth: int = 4):
+        self._it = iterator
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: BaseException | None = None
+        self._done = False
+        self._t = threading.Thread(target=self._fill, daemon=True)
+        self._t.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        except BaseException as e:   # surfaced on next()
+            self._err = e
+        finally:
+            self._done = True
+            self._q.put(None)
+
+    @property
+    def depth(self) -> int:
+        return self._q.qsize()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

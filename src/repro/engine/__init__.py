@@ -1,0 +1,13 @@
+"""Distributed tensorized BGP query engine.
+
+The paper's federated SPARQL execution, adapted to SPMD: triple shards live
+along a `shards` mesh axis; a remote SERVICE block becomes an `all_gather` of
+candidate matches across that axis; queries whose data is co-located compile
+to collective-free programs. The same engine function runs under
+`jax.vmap(axis_name="shards")` on one CPU device (tests, benchmarks) and under
+`shard_map` on a real mesh (dry-run, production).
+"""
+from repro.engine.planner import PhysicalPlan, make_plan
+from repro.engine.oracle import evaluate_bgp
+
+__all__ = ["PhysicalPlan", "make_plan", "evaluate_bgp"]

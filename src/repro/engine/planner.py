@@ -1,0 +1,196 @@
+"""Physical plan construction: join order, shard routing, static capacities.
+
+Mirrors the paper's Query Rewriter/Processor: the plan routes each pattern to
+the shard(s) owning its feature data, picks the PPN, and marks which patterns
+must be gathered across the shard axis (the tensor analogue of a SERVICE
+block). Join order is chosen by selectivity estimates from the store's
+predicate statistics — a beyond-paper planner optimization (the paper executes
+patterns in query order); `order="paper"` keeps the faithful behavior.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.features import pattern_feature
+from repro.core.partitioner import Partitioning
+from repro.kg.query import Const, Query, Var
+from repro.kg.triples import TripleStore
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(3, int(np.ceil(np.log2(max(1, x)))))
+
+
+@dataclass(frozen=True)
+class PlanStep:
+    pattern_idx: int
+    consts: tuple[int, int, int]           # term id, -1 = variable, -2 = no-match
+    slots: tuple[tuple[int, int], ...]     # (triple_pos, var_col), deduped
+    eqs: tuple[tuple[int, int], ...]       # intra-pattern equal positions
+    shared: tuple[tuple[int, int], ...]
+    new: tuple[tuple[int, int], ...]
+    owners: tuple[int, ...]
+    gather: bool
+    scan_cap: int
+    param_slots: tuple[tuple[int, int], ...] = ()  # (triple_pos, param_index)
+
+
+@dataclass
+class PhysicalPlan:
+    query: Query
+    ppn: int
+    n_shards: int
+    n_vars: int
+    var_names: tuple[str, ...]
+    steps: list[PlanStep]
+    table_cap: int
+    n_params: int = 0
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_gathers(self) -> int:
+        return sum(1 for s in self.steps if s.gather)
+
+    @property
+    def is_local(self) -> bool:
+        return self.n_gathers == 0
+
+
+def _estimate(pat, store: TripleStore) -> float:
+    d = store.dictionary
+    if isinstance(pat.p, Const):
+        if pat.p.term not in d:
+            return 0.0
+        pid = d.id_of(pat.p.term)
+        psize = store.p_feature_size(pid)
+        if isinstance(pat.o, Const):
+            if pat.o.term not in d:
+                return 0.0
+            base = store.po_feature_size(pid, d.id_of(pat.o.term))
+        else:
+            base = psize
+        if isinstance(pat.s, Const):
+            base = max(1.0, base / max(1, psize)) if base else 0.0
+        return float(base)
+    return float(len(store))
+
+
+def choose_order(q: Query, store: TripleStore, mode: str = "selectivity") -> list[int]:
+    n = len(q.patterns)
+    if mode == "paper" or n <= 1:
+        return list(range(n))
+    est = {i: _estimate(q.patterns[i], store) for i in range(n)}
+    remaining = set(range(n))
+    bound: set[str] = set()
+    order: list[int] = []
+    while remaining:
+        connected = [i for i in remaining
+                     if bound and set(q.patterns[i].vars()) & bound]
+        pool = connected or list(remaining)
+        # prefer patterns whose join is on an already-bound var, most selective
+        nxt = min(pool, key=lambda i: (est[i], i))
+        order.append(nxt)
+        remaining.discard(nxt)
+        bound |= set(q.patterns[nxt].vars())
+    return order
+
+
+def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
+              cap_margin: float = 1.5, min_cap: int = 64,
+              max_cap: int = 1 << 17,
+              params: dict[tuple[int, int], int] | None = None,
+              capacities: tuple[list[int], int] | None = None) -> PhysicalPlan:
+    """Build the physical plan for query q under a partitioning.
+
+    params: {(pattern_idx, triple_pos): param_index} marks constants that are
+    replaced at run time from a params vector (batched serving).
+    capacities: optional ([scan_cap per step], table_cap) override; otherwise
+    sized from a host-side oracle simulation of the chosen join order.
+    """
+    store = part.catalog.store
+    d = store.dictionary
+    qvars = list(q.vars())
+    vidx = {v: i for i, v in enumerate(qvars)}
+    ord_idx = choose_order(q, store, order)
+
+    # ---- shard routing (the paper's rewriter) --------------------------
+    homes: list[frozenset[int]] = []
+    for pat in q.patterns:
+        f = pattern_feature(pat)
+        units = part.catalog.feature_units.get(f)
+        if units is None:
+            units = tuple(u for u in part.unit_shard if u.p == f.p)
+        homes.append(frozenset(part.unit_shard[u] for u in units
+                               if u in part.unit_shard))
+    counts = [0] * part.n_shards
+    for h in homes:
+        if len(h) == 1:
+            counts[next(iter(h))] += 1
+    ppn = max(range(part.n_shards), key=lambda s: (counts[s], -s))
+
+    # ---- static capacities from host simulation ------------------------
+    if capacities is None:
+        from repro.engine.oracle import evaluate_bgp
+        sizes: list[tuple[int, int]] = []
+        evaluate_bgp(store, q, order=ord_idx, sizes_out=sizes)
+        # scan capacity is join-independent: exact per-pattern match counts
+        # (an empty intermediate result must not shrink later scans)
+        scan_counts = []
+        for pi in ord_idx:
+            pat = q.patterns[pi]
+            ids = [d.id_of(t.term) if (isinstance(t, Const) and t.term in d)
+                   else (-2 if isinstance(t, Const) else None)
+                   for t in (pat.s, pat.p, pat.o)]
+            if -2 in ids:
+                scan_counts.append(0)
+            else:
+                scan_counts.append(int(store.scan(*ids).shape[0]))
+        scan_caps = [min(max_cap, _pow2ceil(int(m * cap_margin) + 8))
+                     for m in scan_counts]
+        table_cap = min(max_cap, _pow2ceil(
+            int(max([r for _, r in sizes] + [1]) * cap_margin) + 8))
+    else:
+        scan_caps, table_cap = [list(capacities[0]), capacities[1]]
+
+    params = params or {}
+    steps: list[PlanStep] = []
+    bound: set[int] = set()
+    for step_i, pi in enumerate(ord_idx):
+        pat = q.patterns[pi]
+        consts = []
+        for t in (pat.s, pat.p, pat.o):
+            if isinstance(t, Const):
+                consts.append(d.id_of(t.term) if t.term in d else -2)
+            else:
+                consts.append(-1)
+        raw = [(pos, vidx[t.name]) for pos, t in enumerate((pat.s, pat.p, pat.o))
+               if isinstance(t, Var)]
+        seen: dict[int, int] = {}
+        eqs: list[tuple[int, int]] = []
+        slots: list[tuple[int, int]] = []
+        for pos, col in raw:
+            if col in seen:
+                eqs.append((seen[col], pos))
+            else:
+                seen[col] = pos
+                slots.append((pos, col))
+        shared = tuple((pos, col) for pos, col in slots if col in bound)
+        new = tuple((pos, col) for pos, col in slots if col not in bound)
+        owners = tuple(sorted(homes[pi]))
+        gather = not (set(owners) <= {ppn}) if owners else True
+        psl = tuple((pos, pidx) for (qpi, pos), pidx in sorted(params.items())
+                    if qpi == pi)
+        steps.append(PlanStep(
+            pattern_idx=pi, consts=tuple(consts), slots=tuple(slots),
+            eqs=tuple(eqs), shared=shared, new=new, owners=owners,
+            gather=gather, scan_cap=int(scan_caps[step_i]), param_slots=psl))
+        bound |= {col for _, col in slots}
+
+    n_params = (max(params.values()) + 1) if params else 0
+    return PhysicalPlan(
+        query=q, ppn=ppn, n_shards=part.n_shards, n_vars=len(qvars),
+        var_names=tuple(qvars), steps=steps, table_cap=int(table_cap),
+        n_params=n_params,
+        meta={"order": ord_idx, "homes": [sorted(h) for h in homes]})

@@ -1,0 +1,32 @@
+"""Public CIN op: padding + platform dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.cin.kernel import cin_layer_kernel
+from repro.kernels.cin.ref import cin_layer_ref
+
+
+def cin_layer(xk, x0, w, *, block_b: int = 8, block_k: int = 64,
+              interpret: bool | None = None):
+    """xk: (B, H, D); x0: (B, F, D); w: (K, H, F) -> (B, K, D)."""
+    xk, x0, w = jnp.asarray(xk), jnp.asarray(x0), jnp.asarray(w)
+    B, H, D = xk.shape
+    K = w.shape[0]
+    bb = min(block_b, B)
+    Bp = int(np.ceil(B / bb)) * bb
+    bk = min(block_k, K)
+    Kp = int(np.ceil(K / bk)) * bk
+    xkp = jnp.pad(xk, ((0, Bp - B), (0, 0), (0, 0)))
+    x0p = jnp.pad(x0, ((0, Bp - B), (0, 0), (0, 0)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, 0), (0, 0)))
+    interp = default_interpret() if interpret is None else interpret
+    out = cin_layer_kernel(xkp, x0p, wp, block_b=bb, block_k=bk,
+                           interpret=interp)
+    return out[:B, :K]
+
+
+def cin_layer_reference(xk, x0, w):
+    return cin_layer_ref(jnp.asarray(xk), jnp.asarray(x0), jnp.asarray(w))

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the xDeepFM CIN layer."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cin_layer_ref(xk, x0, w):
+    """xk: (B, H, D); x0: (B, F, D); w: (K, H, F) -> (B, K, D).
+
+    out[b,k,d] = sum_{h,f} w[k,h,f] * xk[b,h,d] * x0[b,f,d]
+    """
+    z = jnp.einsum("bhd,bfd->bhfd", xk, x0)
+    return jnp.einsum("bhfd,khf->bkd", z, w)

@@ -1,0 +1,46 @@
+"""Public embedding ops: lane padding + platform dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.embedding_bag.kernel import bag_sum_kernel, gather_rows_kernel
+from repro.kernels.embedding_bag.ref import bag_sum_ref, gather_rows_ref
+
+
+def _pad_lanes(table, lanes: int = 128):
+    V, D = table.shape
+    Dp = int(np.ceil(D / lanes)) * lanes
+    if Dp == D:
+        return table, D
+    return jnp.pad(table, ((0, 0), (0, Dp - D))), D
+
+
+def gather_rows(table, ids, *, interpret: bool | None = None):
+    table = jnp.asarray(table)
+    tp, D = _pad_lanes(table)
+    interp = default_interpret() if interpret is None else interpret
+    out = gather_rows_kernel(tp, jnp.asarray(ids), interpret=interp)
+    return out[:, :D]
+
+
+def bag_sum(table, ids, weights=None, *, interpret: bool | None = None):
+    table = jnp.asarray(table)
+    ids = jnp.asarray(ids)
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    tp, D = _pad_lanes(table)
+    interp = default_interpret() if interpret is None else interpret
+    out = bag_sum_kernel(tp, ids, jnp.asarray(weights, jnp.float32),
+                         interpret=interp)
+    return out[:, :D]
+
+
+def gather_rows_reference(table, ids):
+    return gather_rows_ref(jnp.asarray(table), jnp.asarray(ids))
+
+
+def bag_sum_reference(table, ids, weights=None):
+    return bag_sum_ref(jnp.asarray(table), jnp.asarray(ids),
+                       None if weights is None else jnp.asarray(weights))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for embedding gather / bag-sum (EmbeddingBag semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table, ids):
+    """table: (V, D); ids: (N,) -> (N, D)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def bag_sum_ref(table, ids, weights=None):
+    """table: (V, D); ids: (B, bag) -> (B, D) weighted bag sums."""
+    rows = jnp.take(table, ids, axis=0)               # (B, bag, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    return rows.sum(axis=1)

@@ -1,0 +1,107 @@
+"""Blocked causal flash attention (FlashAttention-style online softmax).
+
+Grid (B, H, S/bq, T/bk) with the KV axis innermost (sequential on TPU);
+running max/denominator/accumulator live in VMEM scratch across KV steps.
+Upper-triangular KV blocks are fully predicated off with pl.when — for causal
+prefill that halves the MXU work, the same work-skipping the paper-facing
+roofline analysis models.
+
+VMEM per step at (bq, bk, d) = (512, 512, 128) fp32:
+q 256 KiB + k/v 512 KiB + acc 256 KiB + p 1 MiB scratch ≈ 2 MiB — double-
+bufferable within the ~16 MiB budget.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, n_kblocks, block_q, block_k, t_minus_s):
+    i = pl.program_id(2)   # q block
+    j = pl.program_id(3)   # kv block
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal skip: block is live unless every col is in the strict future of
+    # every row: first col pos > last row pos (+ diagonal offset T-S)
+    q_last = i * block_q + block_q - 1 + t_minus_s
+    k_first = j * block_k
+    live = jnp.logical_or(not causal, k_first <= q_last)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0) + t_minus_s
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kblocks - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@partial(jax.jit,
+         static_argnames=("causal", "block_q", "block_k", "interpret", "scale",
+                          "t_minus_s"))
+def flash_attention_kernel(q, k, v, *, scale: float | None = None,
+                           causal: bool = True, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False,
+                           t_minus_s: int | None = None):
+    """q: (B, H, S, d); k/v: (B, H, T, d), S % block_q == T % block_k == 0.
+
+    t_minus_s: causal diagonal offset (true T - S before any padding)."""
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    grid = (B, H, S // block_q, T // block_k)
+    kern = partial(_flash_kernel, scale=scale, causal=causal,
+                   n_kblocks=T // block_k, block_q=block_q, block_k=block_k,
+                   t_minus_s=T - S if t_minus_s is None else t_minus_s)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max
+            pltpu.VMEM((block_q,), jnp.float32),        # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Public flash-attention op: GQA head mapping, padding, platform dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None):
+    """q: (B, H, S, d); k/v: (B, Hkv, T, d) with H % Hkv == 0 (GQA).
+
+    Pads S/T up to block multiples (pad keys sit in the causal future of all
+    real rows, so results are exact)."""
+    B, H, S, d = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = min(block_q, max(8, 1 << int(np.ceil(np.log2(S)))))
+    bk = min(block_k, max(8, 1 << int(np.ceil(np.log2(T)))))
+    Sp = int(np.ceil(S / bq)) * bq
+    Tp = int(np.ceil(T / bk)) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    interp = default_interpret() if interpret is None else interpret
+    out = flash_attention_kernel(qp, kp, vp, scale=scale, causal=causal,
+                                 block_q=bq, block_k=bk, interpret=interp,
+                                 t_minus_s=T - S)
+    return out[:, :, :S, :]
+
+
+def flash_attention_reference(q, k, v, *, causal: bool = True,
+                              scale: float | None = None):
+    H, Hkv = q.shape[1], k.shape[1]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return attention_ref(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for blocked causal attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, H, S, d); k/v: (B, H, T, d) (same head count)."""
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= (jnp.arange(S)[:, None] + (T - S))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,31 @@
+"""Public Jaccard-distance op with padding + platform dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.jaccard.kernel import jaccard_distance_kernel
+from repro.kernels.jaccard.ref import jaccard_distance_ref
+
+
+def jaccard_distance(m, *, block_q: int = 128, block_f: int = 128,
+                     interpret: bool | None = None):
+    """(Q, F) 0/1 membership matrix -> (Q, Q) Jaccard distance matrix.
+
+    Pads Q and F up to tile multiples; padded rows are empty sets and their
+    rows/cols are discarded."""
+    m = jnp.asarray(m)
+    q, f = m.shape
+    qp = int(np.ceil(max(q, 1) / block_q)) * block_q
+    fp = int(np.ceil(max(f, 1) / block_f)) * block_f
+    mp = jnp.zeros((qp, fp), jnp.float32).at[:q, :f].set(m.astype(jnp.float32))
+    interp = default_interpret() if interpret is None else interpret
+    out = jaccard_distance_kernel(mp, block_q=block_q, block_f=block_f,
+                                  interpret=interp)
+    return out[:q, :q]
+
+
+def jaccard_distance_reference(m):
+    return jaccard_distance_ref(jnp.asarray(m))

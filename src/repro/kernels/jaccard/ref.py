@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the pairwise Jaccard distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jaccard_distance_ref(m: jnp.ndarray) -> jnp.ndarray:
+    """m: (Q, F) 0/1 float membership matrix -> (Q, Q) Jaccard distances.
+
+    Pairs of empty sets have distance 0 (identical)."""
+    m = m.astype(jnp.float32)
+    inter = m @ m.T
+    counts = m.sum(axis=1)
+    union = counts[:, None] + counts[None, :] - inter
+    sim = jnp.where(union > 0, inter / jnp.maximum(union, 1e-30), 1.0)
+    d = 1.0 - sim
+    return d * (1.0 - jnp.eye(m.shape[0], dtype=d.dtype))

@@ -1,0 +1,73 @@
+"""Segment-sum SpMM Pallas kernel: GNN scatter-add as one-hot matmuls.
+
+TPU adaptation (see DESIGN.md): serial scatter is hostile to the VPU, but a
+(node_block x edge_block) one-hot membership matrix turns aggregation into an
+MXU matmul: out[nb] += onehot(recv_block == node_ids).T @ values_block. Edges
+are pre-sorted by receiver so each edge block touches a narrow node range;
+per-block [min, max) receiver tables are prefetched and off-range blocks are
+predicated off entirely — giving block-sparsity like CSR row pointers.
+
+Grid (n_node_blocks, n_edge_blocks), edge axis innermost, accumulating
+directly into the output block (revisited across the sequential edge axis).
+VMEM per step at (bn, be, d) = (128, 512, 128): values 256 KiB + onehot
+256 KiB + out 64 KiB.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(lo_ref, hi_ref, recv_ref, val_ref, out_ref, *,
+                 block_n, n_eblocks):
+    i = pl.program_id(0)   # node block
+    j = pl.program_id(1)   # edge block
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    node_lo = i * block_n
+    # block-sparse skip via prefetched per-edge-block receiver ranges
+    live = jnp.logical_and(hi_ref[j] >= node_lo,
+                           lo_ref[j] < node_lo + block_n)
+
+    @pl.when(live)
+    def _():
+        recv = recv_ref[...]                       # (be,) int32
+        vals = val_ref[...]                        # (be, d)
+        local = recv - node_lo                     # may be out of [0, bn)
+        onehot = (local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (recv.shape[0], block_n), 1)).astype(vals.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            onehot, vals, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "block_n", "block_e", "interpret"))
+def segment_spmm_kernel(values, receivers, block_lo, block_hi, *,
+                        n_nodes: int, block_n: int = 128, block_e: int = 512,
+                        interpret: bool = False):
+    """values: (E, D) sorted by receiver; receivers: (E,) int32 (padded edges
+    must carry receiver == n_nodes_padded-ish sentinel outside every block
+    range via block_hi); block_lo/hi: (E/block_e,) per-block receiver ranges.
+    """
+    E, D = values.shape
+    assert E % block_e == 0 and n_nodes % block_n == 0
+    grid = (n_nodes // block_n, E // block_e)
+    return pl.pallas_call(
+        partial(_spmm_kernel, block_n=block_n, n_eblocks=E // block_e),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E // block_e,), lambda i, j: (0,)),
+            pl.BlockSpec((E // block_e,), lambda i, j: (0,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, D), values.dtype),
+        interpret=interpret,
+    )(block_lo, block_hi, receivers, values)

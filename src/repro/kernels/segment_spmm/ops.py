@@ -1,0 +1,47 @@
+"""Public segment-spmm op: sorting, padding, block-range tables, dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import default_interpret
+from repro.kernels.segment_spmm.kernel import segment_spmm_kernel
+from repro.kernels.segment_spmm.ref import segment_spmm_ref
+
+
+def segment_spmm(values, receivers, edge_mask, n_nodes: int, *,
+                 block_n: int = 128, block_e: int = 512,
+                 interpret: bool | None = None, assume_sorted: bool = False):
+    """Scatter-sum per-edge messages (E, D) into (n_nodes, D).
+
+    Sorts edges by receiver (stable) unless assume_sorted; masked edges get a
+    sentinel receiver beyond every node block so they never contribute.
+    """
+    values = jnp.asarray(values)
+    receivers = jnp.asarray(receivers, jnp.int32)
+    E, D = values.shape
+    n_pad = int(np.ceil(n_nodes / block_n)) * block_n
+    sentinel = n_pad + block_n  # outside every block's range
+    recv = jnp.where(edge_mask, receivers, sentinel)
+    if not assume_sorted:
+        order = jnp.argsort(recv)
+        recv = recv[order]
+        values = values[order]
+    Ep = int(np.ceil(E / block_e)) * block_e
+    recv = jnp.pad(recv, (0, Ep - E), constant_values=sentinel)
+    values = jnp.pad(values, ((0, Ep - E), (0, 0)))
+    rb = recv.reshape(-1, block_e)
+    block_lo = rb.min(axis=1).astype(jnp.int32)
+    block_hi = rb.max(axis=1).astype(jnp.int32)
+    # sentinel-only blocks get an empty range (hi < lo over all node blocks)
+    interp = default_interpret() if interpret is None else interpret
+    out = segment_spmm_kernel(values, recv, block_lo, block_hi,
+                              n_nodes=n_pad, block_n=block_n, block_e=block_e,
+                              interpret=interp)
+    return out[:n_nodes]
+
+
+def segment_spmm_reference(values, receivers, edge_mask, n_nodes: int):
+    return segment_spmm_ref(jnp.asarray(values), jnp.asarray(receivers),
+                            jnp.asarray(edge_mask), n_nodes)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for edge-message segment aggregation (GNN scatter-sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm_ref(values, receivers, edge_mask, n_nodes: int):
+    """values: (E, D) per-edge messages; scatter-sum into (n_nodes, D)."""
+    v = jnp.where(edge_mask[:, None], values, 0)
+    return jax.ops.segment_sum(v, receivers, num_segments=n_nodes)

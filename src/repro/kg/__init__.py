@@ -1,0 +1,6 @@
+"""Knowledge-graph substrate: dictionary encoding, triple store, generators, query IR."""
+from repro.kg.dictionary import Dictionary
+from repro.kg.query import Term, Var, Const, TriplePattern, Query
+from repro.kg.triples import TripleStore
+
+__all__ = ["Dictionary", "Term", "Var", "Const", "TriplePattern", "Query", "TripleStore"]

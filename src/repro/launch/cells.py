@@ -1,0 +1,430 @@
+"""Dry-run cell builders: (arch x shape) -> abstract step fn + input specs.
+
+Every cell returns the function to jit, ShapeDtypeStruct arguments (nothing is
+allocated), sharding trees for the production mesh, and analytic MODEL_FLOPS
+for the roofline's useful-compute ratio.
+
+Per-arch training knobs (grad-accum microbatching, FSDP, bf16 moments,
+chunked attention) are recorded in LM_TRAIN_KNOBS — these are the memory
+decisions EXPERIMENTS.md §Dry-run reports per cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.models.gnn.common import GraphBatch
+from repro.optim import adamw_init, adamw_update
+from repro.sharding.rules import (batch_axis, gnn_rules, lm_rules,
+                                  make_param_specs, recsys_rules)
+
+I32, F32 = jnp.int32, jnp.float32
+
+# decode cache-update strategy for decode cells ("dus" baseline / "masked"
+# collective-free write — §Perf iteration C). Overridden by dryrun --cache-update.
+CACHE_UPDATE_MODE = "masked"
+
+# EP implementation: "spmd" baseline / "shard_map" explicit EP (§Perf iter A)
+MOE_IMPL = "shard_map"
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                 # train | prefill | decode | forward | retrieval
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float
+    meta: dict
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+LM_SHAPE_DEFS = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+    "long_500k": dict(seq=524288, batch=1),
+}
+
+# grad-accum chosen so saved per-layer activations (mb x S x D bf16 x L)
+# stay ~<= 4 GB/device with scan-over-layers remat (DESIGN §5)
+LM_TRAIN_KNOBS = {
+    "granite-3-8b": dict(accum=8, fsdp=True, moments="float32"),
+    "granite-20b": dict(accum=16, fsdp=True, moments="float32"),
+    "nemotron-4-15b": dict(accum=8, fsdp=True, moments="float32"),
+    "qwen2-moe-a2.7b": dict(accum=8, fsdp=True, moments="float32"),
+    "deepseek-v3-671b": dict(accum=16, fsdp=True, moments="bfloat16"),
+}
+# deepseek params don't fit TP-only at inference: shard over data too
+LM_SERVE_FSDP = {"deepseek-v3-671b": True}
+
+
+def _lm_state_specs(cfg, mesh, *, fsdp):
+    from repro.models.transformer import init_params
+    pshape = jax.eval_shape(partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = make_param_specs(pshape, mesh, lm_rules(mesh, fsdp=fsdp))
+    return pshape, pspecs
+
+
+def _cache_specs_tree(cfg, cache_shape, mesh, seq_axes):
+    """PartitionSpec tree for an init_cache()-shaped tree. seq_axes shards the
+    cache sequence dim; batch shards over the data axes when divisible."""
+    dp = batch_axis(mesh)
+
+    def spec_of(leaf):
+        shp = leaf.shape
+        # (L, B, T, ...) tuples
+        batch_ok = shp[1] % int(np.prod([mesh.shape[a] for a in
+                                         (dp if isinstance(dp, tuple) else (dp,))])) == 0
+        b_ax = dp if batch_ok and shp[1] > 1 else None
+        t_ax = seq_axes
+        sz = int(np.prod([mesh.shape[a] for a in
+                          (t_ax if isinstance(t_ax, tuple) else (t_ax,))]))
+        t_ax = t_ax if shp[2] % sz == 0 else None
+        return P(*([None, b_ax, t_ax] + [None] * (len(shp) - 3)))
+
+    return jax.tree.map(spec_of, cache_shape)
+
+
+def _lm_model_flops(cfg, n_tokens: int, *, train: bool) -> float:
+    return (6.0 if train else 2.0) * cfg.active_params() * n_tokens
+
+
+def build_lm_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    from repro.models import transformer as tr
+    spec = get_arch(arch_id)
+    cfg = spec.full()
+    sd = LM_SHAPE_DEFS[shape_id]
+    dp = batch_axis(mesh)
+    ns = lambda s: NamedSharding(mesh, s)
+    # pin (B, S, D) activations to batch-over-data at layer boundaries
+    # (see transformer.ACT_SHARDING); decode (B, 1, D) is unaffected
+    batch_div = sd["batch"] % int(np.prod(
+        [mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))])) == 0
+    tr.ACT_SHARDING = ns(P(dp if batch_div and sd["batch"] > 1 else None,
+                           None, None))
+    if cfg.moe:
+        e_ax = "model" if cfg.n_experts % int(mesh.shape["model"]) == 0 else None
+        cap_ax = dp if batch_div and sd["batch"] > 1 else None
+        tr.MOE_SHARDING = ns(P(e_ax, cap_ax, None))
+        if e_ax is None:  # expert-TP compute layout (gathers the FSDP dim)
+            tr.MOE_WIN_SHARDING = ns(P(None, None, "model"))
+            tr.MOE_WOUT_SHARDING = ns(P(None, "model", None))
+        else:             # EP compute layout
+            tr.MOE_WIN_SHARDING = ns(P("model", None, None))
+            tr.MOE_WOUT_SHARDING = ns(P("model", None, None))
+        if MOE_IMPL == "shard_map":   # §Perf iteration A (EP and expert-TP)
+            tr.MOE_SHARD_MAP = {"mesh": mesh, "dp": dp, "model": "model"}
+        else:
+            tr.MOE_SHARD_MAP = None
+    else:
+        tr.MOE_SHARDING = None
+        tr.MOE_WIN_SHARDING = None
+        tr.MOE_WOUT_SHARDING = None
+        tr.MOE_SHARD_MAP = None
+
+    if shape_id == "train_4k":
+        knobs = LM_TRAIN_KNOBS[arch_id]
+        accum = knobs["accum"]
+        B, S = sd["batch"], sd["seq"]
+        # microbatch must stay divisible by the (pod x data) axis size
+        dp_sz = int(np.prod([mesh.shape[a] for a in
+                             (dp if isinstance(dp, tuple) else (dp,))]))
+        while accum > 1 and (B // accum) % dp_sz != 0:
+            accum //= 2
+        mb = B // accum
+        cfg_t = replace(cfg, attn_chunk=0, ce_chunk=512)
+        pshape, pspecs = _lm_state_specs(cfg_t, mesh, fsdp=knobs["fsdp"])
+        oshape = jax.eval_shape(partial(
+            adamw_init, moments_dtype=jnp.dtype(knobs["moments"])), pshape)
+        ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+
+        gshard = jax.tree.map(ns, pspecs)
+
+        def train_step(params, opt_state, batch):
+            def loss_mean(p, mbatch):
+                loss, metrics = tr.loss_fn(p, cfg_t, mbatch["tokens"],
+                                           mbatch["labels"], remat=True)
+                return loss, metrics
+
+            def micro(acc, mbatch):
+                (l, m), g = jax.value_and_grad(loss_mean, has_aux=True)(
+                    params, mbatch)
+                # ZeRO-2: accumulate grads in the params' sharding — each
+                # microbatch reduce-scatters instead of keeping a replicated
+                # fp32 grad tree alive across the accumulation scan
+                g = jax.lax.with_sharding_constraint(g, gshard)
+                acc = jax.lax.with_sharding_constraint(
+                    jax.tree.map(jnp.add, acc, g), gshard)
+                return acc, l
+            zero = jax.lax.with_sharding_constraint(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params), gshard)
+            grads, losses = jax.lax.scan(micro, zero, batch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            params, opt_state, om = adamw_update(
+                grads, opt_state, params, lr=1e-4)
+            return params, opt_state, losses.mean()
+
+        args = (pshape, oshape,
+                {"tokens": sds((accum, mb, S), I32),
+                 "labels": sds((accum, mb, S), I32)})
+        bspec = {"tokens": P(None, dp, None), "labels": P(None, dp, None)}
+        in_sh = (jax.tree.map(ns, pspecs),
+                 jax.tree.map(ns, ospecs), jax.tree.map(ns, bspec))
+        out_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs), ns(P()))
+        return Cell(arch_id, shape_id, "train", train_step, args, in_sh,
+                    out_sh, _lm_model_flops(cfg, B * S, train=True),
+                    dict(knobs=knobs, mb=mb))
+
+    if shape_id == "prefill_32k":
+        B, S = sd["batch"], sd["seq"]
+        cfg_s = replace(cfg, attn_chunk=2048)
+        fsdp = LM_SERVE_FSDP.get(arch_id, False)
+        pshape, pspecs = _lm_state_specs(cfg_s, mesh, fsdp=fsdp)
+        cshape = jax.eval_shape(partial(tr.init_cache, cfg_s, B, S))
+        cspecs = _cache_specs_tree(cfg_s, cshape, mesh, "model")
+
+        def prefill_step(params, tokens):
+            logits, cache = tr.prefill(params, cfg_s, tokens)
+            return logits[:, -1, :], cache
+
+        args = (pshape, sds((B, S), I32))
+        in_sh = (jax.tree.map(ns, pspecs), ns(P(dp, None)))
+        out_sh = (ns(P(dp, "model")), jax.tree.map(ns, cspecs))
+        return Cell(arch_id, shape_id, "prefill", prefill_step, args, in_sh,
+                    out_sh, _lm_model_flops(cfg, B * S, train=False),
+                    dict(attn_chunk=cfg_s.attn_chunk))
+
+    # decode shapes
+    B, T = sd["batch"], sd["seq"]
+    tr.CACHE_UPDATE = CACHE_UPDATE_MODE   # "masked" = §Perf iteration C
+    # §Perf iteration C2: split-KV decode attention (GQA archs)
+    tr.DECODE_SHARD_MAP = ({"mesh": mesh, "dp": dp, "model": "model"}
+                           if CACHE_UPDATE_MODE == "masked" else None)
+    cfg_d = cfg
+    fsdp = LM_SERVE_FSDP.get(arch_id, False)
+    pshape, pspecs = _lm_state_specs(cfg_d, mesh, fsdp=fsdp)
+    cshape = jax.eval_shape(partial(tr.init_cache, cfg_d, B, T))
+    seq_axes = ("data", "model") if B == 1 else "model"
+    if "pod" in mesh.axis_names and B == 1:
+        seq_axes = ("pod", "data", "model")
+    cspecs = _cache_specs_tree(cfg_d, cshape, mesh, seq_axes)
+
+    def decode(params, cache, tokens, cur):
+        logits, new_cache = tr.decode_step(params, cfg_d, cache, tokens, cur)
+        return logits, new_cache
+
+    args = (pshape, cshape, sds((B, 1), I32), sds((), I32))
+    in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, cspecs),
+             ns(P(batch_axis(mesh) if B > 1 else None, None)), ns(P()))
+    out_sh = (ns(P(batch_axis(mesh) if B > 1 else None, None, "model")),
+              jax.tree.map(ns, cspecs))
+    return Cell(arch_id, shape_id, "decode", decode, args, in_sh, out_sh,
+                _lm_model_flops(cfg, B, train=False), dict(kv_len=T))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def gnn_full_shapes(shape_id: str) -> dict:
+    """Analytic padded sizes matching data.graphs.make_graph_batch."""
+    if shape_id == "full_graph_sm":
+        n, e = 2708, 10556 + 2708
+    elif shape_id == "ogb_products":
+        n, e = 2_449_029, 61_859_140 + 2_449_029
+    elif shape_id == "molecule":
+        n, e = 30 * 128, 64 * 128
+    elif shape_id == "minibatch_lg":
+        bn, f1, f2 = 1024, 15, 10
+        n = bn + bn * f1 + bn * f1 * f2
+        e = bn * f1 + bn * f1 * f2
+    else:
+        raise KeyError(shape_id)
+    n = ((n + 127) // 128) * 128
+    e = ((e + 511) // 512) * 512
+    return dict(n=n, e=e,
+                n_graphs=128 if shape_id == "molecule" else 1)
+
+
+GNN_SHAPE_DIMS = {
+    "full_graph_sm": dict(d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(d_feat=602, n_classes=41),
+    "ogb_products": dict(d_feat=100, n_classes=47),
+    "molecule": dict(d_feat=16, n_classes=4),
+}
+
+
+def graph_batch_specs(shape_id: str, mesh) -> tuple[GraphBatch, GraphBatch]:
+    """(ShapeDtypeStruct GraphBatch, PartitionSpec GraphBatch)."""
+    dims = GNN_SHAPE_DIMS[shape_id]
+    gs = gnn_full_shapes(shape_id)
+    n, e, ng = gs["n"], gs["e"], gs["n_graphs"]
+    dp = batch_axis(mesh)
+    dpn = dp if isinstance(dp, tuple) else (dp,)
+    dsz = int(np.prod([mesh.shape[a] for a in dpn]))
+    node_ax = dp if n % dsz == 0 else None
+    batch = GraphBatch(
+        node_feat=sds((n, dims["d_feat"]), F32),
+        positions=sds((n, 3), F32),
+        senders=sds((e,), I32), receivers=sds((e,), I32),
+        edge_mask=sds((e,), jnp.bool_), node_mask=sds((n,), jnp.bool_),
+        labels=sds((n,), I32), label_mask=sds((n,), jnp.bool_),
+        graph_ids=sds((n,), I32), n_graphs=ng,
+        species=sds((n,), I32))
+    specs = GraphBatch(
+        node_feat=P(node_ax, None), positions=P(node_ax, None),
+        senders=P("model"), receivers=P("model"),
+        edge_mask=P("model"), node_mask=P(node_ax),
+        labels=P(node_ax), label_mask=P(node_ax),
+        graph_ids=P(node_ax), n_graphs=ng, species=P(node_ax))
+    return batch, specs
+
+
+def _gnn_module(arch_id: str):
+    from repro.models.gnn import egnn, equiformer_v2, gcn, nequip
+    return {"gcn-cora": gcn, "egnn": egnn, "nequip": nequip,
+            "equiformer-v2": equiformer_v2}[arch_id]
+
+
+def build_gnn_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    mod = _gnn_module(arch_id)
+    dims = GNN_SHAPE_DIMS[shape_id]
+    if arch_id == "gcn-cora":
+        from repro.configs import gcn_cora
+        cfg = gcn_cora.full(shape_id)
+    else:
+        cfg = get_arch(arch_id).full()
+    ns = lambda s: NamedSharding(mesh, s)
+
+    pshape = jax.eval_shape(partial(mod.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = make_param_specs(pshape, mesh, gnn_rules(mesh))
+    oshape = jax.eval_shape(partial(adamw_init), pshape)
+    ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+    batch, bspecs = graph_batch_specs(shape_id, mesh)
+
+    def train_step(params, opt_state, g):
+        def loss(p):
+            return mod.loss_fn(p, cfg, g)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state, om = adamw_update(grads, opt_state, params,
+                                             lr=1e-3)
+        return params, opt_state, l
+
+    args = (pshape, oshape, batch)
+    in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs),
+             jax.tree.map(ns, bspecs,
+                          is_leaf=lambda x: isinstance(x, P)))
+    out_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs), ns(P()))
+    n_par = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    gs = gnn_full_shapes(shape_id)
+    return Cell(arch_id, shape_id, "train", train_step, args, in_sh, out_sh,
+                6.0 * n_par * gs["n"], dict(n_params=n_par, **gs))
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="forward"),
+    "serve_bulk": dict(batch=262144, kind="forward"),
+    "retrieval_cand": dict(batch=1, n_cand=1_000_000, kind="retrieval"),
+}
+
+
+def build_recsys_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    from repro.models.recsys import xdeepfm as xd
+    cfg = get_arch(arch_id).full()
+    sd = RECSYS_SHAPE_DEFS[shape_id]
+    dp = batch_axis(mesh)
+    ns = lambda s: NamedSharding(mesh, s)
+    pshape = jax.eval_shape(partial(xd.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = make_param_specs(pshape, mesh, recsys_rules(mesh))
+    n_par = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+
+    if sd["kind"] == "retrieval":
+        n_cand = sd["n_cand"]
+
+        def retrieval(params, query, cand_ids):
+            return xd.retrieval_scores(params, cfg, query, cand_ids)
+
+        args = (pshape, sds((cfg.n_sparse * cfg.embed_dim,), F32),
+                sds((n_cand,), I32))
+        in_sh = (jax.tree.map(ns, pspecs), ns(P(None)), ns(P("model")))
+        out_sh = ns(P("model"))
+        return Cell(arch_id, shape_id, "retrieval", retrieval, args, in_sh,
+                    out_sh, 2.0 * n_cand * cfg.embed_dim,
+                    dict(n_cand=n_cand))
+
+    B = sd["batch"]
+    bshape = {"sparse": sds((B, cfg.n_sparse), I32),
+              "dense": sds((B, cfg.n_dense), F32),
+              "label": sds((B,), F32)}
+    bspec = {"sparse": P(dp, None), "dense": P(dp, None), "label": P(dp)}
+
+    if sd["kind"] == "train":
+        oshape = jax.eval_shape(partial(adamw_init), pshape)
+        ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+
+        def train_step(params, opt_state, batch):
+            (l, m), grads = jax.value_and_grad(
+                lambda p: xd.loss_fn(p, cfg, batch), has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 lr=1e-3)
+            return params, opt_state, l
+
+        args = (pshape, oshape, bshape)
+        in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs),
+                 jax.tree.map(ns, bspec))
+        out_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs), ns(P()))
+        return Cell(arch_id, shape_id, "train", train_step, args, in_sh,
+                    out_sh, 6.0 * (n_par - cfg.total_vocab * 11) * B
+                    + 6.0 * B * cfg.n_sparse * cfg.embed_dim,
+                    dict(n_params=n_par))
+
+    def fwd(params, batch):
+        return xd.forward(params, cfg, batch["sparse"], batch["dense"])
+
+    args = (pshape, bshape)
+    in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, bspec))
+    out_sh = ns(P(dp))
+    return Cell(arch_id, shape_id, "forward", fwd, args, in_sh, out_sh,
+                2.0 * (n_par - cfg.total_vocab * 11) * B
+                + 2.0 * B * cfg.n_sparse * cfg.embed_dim,
+                dict(n_params=n_par))
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    fam = get_arch(arch_id).family
+    if fam == "lm":
+        return build_lm_cell(arch_id, shape_id, mesh)
+    if fam == "gnn":
+        return build_gnn_cell(arch_id, shape_id, mesh)
+    if fam == "recsys":
+        return build_recsys_cell(arch_id, shape_id, mesh)
+    raise KeyError(fam)

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+touches no jax device state — required because the dry-run must set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods -> 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_engine_mesh(n_shards: int):
+    """Mesh for the WawPart federated engine (shard axis only)."""
+    return jax.make_mesh((n_shards,), ("shards",))
+
+
+def make_local_mesh():
+    """Whatever devices exist locally (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

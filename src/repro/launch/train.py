@@ -1,0 +1,96 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the fault-tolerant Trainer on the selected architecture. On this CPU
+container only reduced (smoke) configs are trainable; full configs are for
+the dry-run meshes. Resumes automatically from --ckpt-dir.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data import Prefetcher
+from repro.runtime.trainer import Trainer, TrainTask
+
+
+def build_task(arch_id: str, steps: int, batch: int, seq: int,
+               compress: bool) -> TrainTask:
+    spec = get_arch(arch_id)
+    cfg = spec.smoke()
+    if spec.family == "lm":
+        from repro.data.tokens import token_batches
+        from repro.models.transformer import init_params, loss_fn
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        return TrainTask(
+            name=arch_id,
+            init_params=lambda k: init_params(cfg, k),
+            loss_fn=lambda p, b: loss_fn(p, cfg, jnp.asarray(b["tokens"]),
+                                         jnp.asarray(b["labels"])),
+            batches=Prefetcher(token_batches(cfg.vocab_size, batch, seq,
+                                             seed=1)),
+            lr=1e-3, warmup=20, total_steps=steps,
+            grad_compression="int8_ef" if compress else None)
+    if spec.family == "gnn":
+        import importlib
+        from repro.data.graphs import make_graph_batch
+        mod = importlib.import_module(
+            "repro.models.gnn." + {"gcn-cora": "gcn", "egnn": "egnn",
+                                   "nequip": "nequip",
+                                   "equiformer-v2": "equiformer_v2"}[arch_id])
+        g = make_graph_batch("full_graph_sm", d_feat=getattr(cfg, "d_in", 16),
+                             n_classes=getattr(cfg, "n_classes", 4),
+                             reduced=True)
+
+        def batches():
+            while True:
+                yield g
+        return TrainTask(
+            name=arch_id,
+            init_params=lambda k: mod.init_params(cfg, k),
+            loss_fn=lambda p, b: mod.loss_fn(p, cfg, b),
+            batches=batches(), lr=1e-3, warmup=10, total_steps=steps,
+            grad_compression="int8_ef" if compress else None)
+    # recsys
+    from repro.data.recsys import click_batches
+    from repro.models.recsys import xdeepfm as xd
+
+    def rs_batches():
+        for b in click_batches(cfg.vocab_sizes, cfg.n_dense, batch, seed=1):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+    return TrainTask(
+        name=arch_id,
+        init_params=lambda k: xd.init_params(cfg, k),
+        loss_fn=lambda p, b: xd.loss_fn(p, cfg, b),
+        batches=Prefetcher(rs_batches()), lr=1e-3, warmup=10,
+        total_steps=steps,
+        grad_compression="int8_ef" if compress else None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", action="store_true")
+    args = ap.parse_args()
+
+    task = build_task(args.arch, args.steps, args.batch, args.seq,
+                      args.compress)
+    trainer = Trainer(task, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every)
+    out = trainer.run(steps=args.steps)
+    log = out["log"]
+    print(f"[{args.arch}] steps {log[0]['step']}..{log[-1]['step']} "
+          f"loss {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f} "
+          f"({sum(r['dt'] for r in log):.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

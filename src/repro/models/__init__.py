@@ -1,0 +1,7 @@
+"""Model zoo: the 10 assigned architectures.
+
+LM family (transformer.py): granite-3-8b, granite-20b, nemotron-4-15b,
+qwen2-moe-a2.7b, deepseek-v3-671b.
+GNN family (gnn/): gcn-cora, egnn, nequip, equiformer-v2.
+RecSys (recsys/): xdeepfm.
+"""

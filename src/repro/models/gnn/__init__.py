@@ -1,0 +1,1 @@
+"""GNN family: gcn-cora, egnn, nequip, equiformer-v2 (+ SO(3) utilities)."""

@@ -1,0 +1,104 @@
+"""Shared GNN plumbing: padded graph batches and segment-op message passing.
+
+JAX has no sparse message-passing primitive (BCOO only) — per the brief,
+scatter/gather aggregation is built here from `jax.ops.segment_sum` over an
+edge index, with static num_segments for jit. The Pallas `segment_spmm`
+kernel accelerates the gather-matmul-scatter on TPU; these jnp paths are its
+reference semantics and the CPU fallback.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class GraphBatch:
+    """Padded, fixed-shape graph batch (registered as a jax pytree;
+    n_graphs is static metadata).
+
+    senders/receivers index into the node axis; padded edges point at node 0
+    with edge_mask False. For batched small graphs (molecule shape), graph_ids
+    maps nodes to their graph for pooling.
+    """
+    node_feat: jax.Array          # (N, F) or None
+    positions: jax.Array | None   # (N, 3) geometric graphs
+    senders: jax.Array            # (E,) int32
+    receivers: jax.Array          # (E,) int32
+    edge_mask: jax.Array          # (E,) bool
+    node_mask: jax.Array          # (N,) bool
+    labels: jax.Array | None = None
+    label_mask: jax.Array | None = None
+    graph_ids: jax.Array | None = None   # (N,) int32 for pooled tasks
+    n_graphs: int = 1
+    species: jax.Array | None = None     # (N,) int32 atomic species
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["node_feat", "positions", "senders", "receivers",
+                 "edge_mask", "node_mask", "labels", "label_mask",
+                 "graph_ids", "species"],
+    meta_fields=["n_graphs"])
+
+
+def aggregate(messages: jax.Array, receivers: jax.Array, edge_mask: jax.Array,
+              n_nodes: int, *, reduce: str = "sum") -> jax.Array:
+    """Scatter edge messages to receiver nodes. messages: (E, ...)."""
+    m = jnp.where(edge_mask.reshape(-1, *([1] * (messages.ndim - 1))),
+                  messages, 0)
+    out = jax.ops.segment_sum(m, receivers, num_segments=n_nodes)
+    if reduce == "mean":
+        deg = jax.ops.segment_sum(edge_mask.astype(messages.dtype), receivers,
+                                  num_segments=n_nodes)
+        out = out / jnp.clip(deg, 1.0)[(...,) + (None,) * (messages.ndim - 1)]
+    return out
+
+
+def edge_softmax(scores: jax.Array, receivers: jax.Array, edge_mask: jax.Array,
+                 n_nodes: int) -> jax.Array:
+    """Numerically-stable softmax over each receiver's incoming edges.
+    scores: (E, H)."""
+    neg = jnp.finfo(jnp.float32).min / 2
+    s = jnp.where(edge_mask[:, None], scores.astype(jnp.float32), neg)
+    smax = jax.ops.segment_max(s, receivers, num_segments=n_nodes)
+    s = s - smax[receivers]
+    e = jnp.where(edge_mask[:, None], jnp.exp(s), 0.0)
+    z = jax.ops.segment_sum(e, receivers, num_segments=n_nodes)
+    return (e / jnp.clip(z[receivers], 1e-20)).astype(scores.dtype)
+
+
+def degrees(receivers, edge_mask, n_nodes, dtype=jnp.float32):
+    return jax.ops.segment_sum(edge_mask.astype(dtype), receivers,
+                               num_segments=n_nodes)
+
+
+def graph_targets(g: "GraphBatch") -> jax.Array:
+    """Per-graph scalar regression targets derived from node labels
+    (synthetic-energy convention shared by the geometric models)."""
+    gid = g.graph_ids if g.graph_ids is not None else \
+        jnp.zeros(g.node_mask.shape[0], jnp.int32)
+    w = g.node_mask.astype(jnp.float32)
+    s = jax.ops.segment_sum(g.labels.astype(jnp.float32) * w, gid,
+                            num_segments=g.n_graphs)
+    c = jax.ops.segment_sum(w, gid, num_segments=g.n_graphs)
+    return s / jnp.clip(c, 1.0)
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (a, b), jnp.float32).astype(dtype)
+                  / np.sqrt(a),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,66 @@
+"""GCN (Kipf & Welling 2017): 2-layer symmetric-normalized spectral conv.
+
+Assigned config gcn-cora: n_layers=2, d_hidden=16, mean aggregator, sym norm.
+Self-loops are added by the data pipeline. Node classification with masked
+cross-entropy (Cora splits / ogbn-products style full batch)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import GraphBatch, aggregate, degrees
+
+
+@dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    norm: str = "sym"         # sym | mean
+    dtype: str = "float32"
+
+
+def init_params(cfg: GCNConfig, key) -> dict:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    dt = jnp.dtype(cfg.dtype)
+    return {"layers": [
+        {"w": (jax.random.normal(k, (a, b), jnp.float32)
+               * np.sqrt(2.0 / a)).astype(dt)}
+        for k, a, b in zip(ks, dims[:-1], dims[1:])]}
+
+
+def forward(params, cfg: GCNConfig, g: GraphBatch) -> jax.Array:
+    n = g.node_feat.shape[0]
+    deg = jnp.clip(degrees(g.receivers, g.edge_mask, n), 1.0)
+    deg_s = jnp.clip(degrees(g.senders, g.edge_mask, n), 1.0)
+    if cfg.norm == "sym":
+        coef = jax.lax.rsqrt(deg_s[g.senders]) * jax.lax.rsqrt(deg[g.receivers])
+    else:
+        coef = 1.0 / deg[g.receivers]
+    x = g.node_feat
+    for i, layer in enumerate(params["layers"]):
+        x = x @ layer["w"]                                  # dense first: F->H
+        msg = x[g.senders] * coef[:, None].astype(x.dtype)
+        x = aggregate(msg, g.receivers, g.edge_mask, n)
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params, cfg: GCNConfig, g: GraphBatch):
+    logits = forward(params, cfg, g).astype(jnp.float32)
+    mask = (g.label_mask if g.label_mask is not None else g.node_mask)
+    mask = mask.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe = jnp.clip(g.labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[:, None], axis=-1)[:, 0]
+    loss = (nll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    acc = (((logits.argmax(-1) == g.labels) * mask).sum()
+           / jnp.clip(mask.sum(), 1.0))
+    return loss, {"loss": loss, "acc": acc}

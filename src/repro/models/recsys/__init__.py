@@ -1,0 +1,1 @@
+"""RecSys family: xDeepFM."""

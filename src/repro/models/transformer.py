@@ -1,0 +1,917 @@
+"""Configurable decoder-only transformer LM covering the five assigned archs.
+
+Features: GQA/MQA attention, DeepSeek MLA (compressed KV cache), RoPE,
+RMSNorm, SwiGLU / GELU / squared-ReLU MLPs, shared+routed top-k MoE with
+capacity-bounded sort-free dispatch, optional MTP head (DeepSeek-V3), and
+layer-stacked parameters scanned with `lax.scan` (compile-time stays flat in
+depth). Pure functional JAX; sharding is applied externally via PartitionSpec
+trees from `repro.sharding.rules`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Optional NamedSharding pinned onto (B, S, D) activations at layer
+# boundaries. Without it, ZeRO-3/FSDP param specs tempt the SPMD partitioner
+# into replicating the batch and sharding the contraction dim instead —
+# full-batch attention scores per device (measured: 4.3 GB tensors on
+# granite-3-8b). Set by launch/cells.py; None for single-device tests.
+ACT_SHARDING = None
+
+# Decode cache-update strategy. "dus" (dynamic_update_slice) is natural but a
+# runtime-dynamic index into the seq-sharded cache makes the SPMD partitioner
+# gather the cache (measured 134 MB all-gather per layer per decode step on
+# granite-3-8b). "masked" writes via where(iota == cur, new, cache) — pure
+# elementwise over the sharded dim, collective-free (§Perf iteration C).
+CACHE_UPDATE = "dus"
+
+# Optional NamedSharding for the MoE dispatch buffer (E, capacity, D): EP
+# shards E over the model axis (deepseek, 256 % 16 == 0); expert-TP shards
+# the capacity (token-slot) dim over data and d_ff over model (qwen2-moe).
+# Without it the partitioner replicates every expert matmul (measured 16x
+# FLOP inflation on qwen2-moe).
+MOE_SHARDING = None
+# Compute-time shardings for expert weights (E, D, F) / (E, F, D): ZeRO-3
+# stores them FSDP-sharded; these constraints all-gather the data dim at use.
+MOE_WIN_SHARDING = None
+MOE_WOUT_SHARDING = None
+
+# §Perf iteration C2: flash-decoding split-KV attention under shard_map.
+# With a seq-sharded KV cache and model-sharded q heads the SPMD partitioner
+# must gather one of them (measured: 2x67 MB KV all-gather per layer per
+# decode step on granite-3-8b). Splitting softmax across the model axis
+# (per-shard max/denominator/weighted-value + one psum of (B, H, dh)) moves
+# ~134 MB/layer down to ~0.4 MB/layer. Same dict shape as MOE_SHARD_MAP.
+DECODE_SHARD_MAP = None
+
+# §Perf iteration A: explicit shard_map expert parallelism. The SPMD
+# partitioner cannot shard a scatter into a doubly-sharded dispatch buffer
+# and replicates the whole expert computation (measured: 91 GB all-reduce
+# per layer-microbatch on deepseek-v3). Under shard_map each model column
+# keeps its E/16 experts, routes only its local tokens (which are already
+# replicated across the model axis under TP), and one psum of (T_loc, D)
+# combines — the transpose also keeps expert grads sharded (ZeRO intact).
+# Set to {"mesh": mesh, "dp": <data axes>, "model": "model"} to enable.
+MOE_SHARD_MAP = None
+
+
+def _spec_fits(sharding, shape) -> bool:
+    mesh = sharding.mesh
+    for dim, ax in zip(shape, sharding.spec):
+        if ax is None:
+            continue
+        size = int(np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+        if dim % size != 0:
+            return False
+    return True
+
+
+def _constrain_act(x):
+    if ACT_SHARDING is not None and x.ndim == 3 \
+            and _spec_fits(ACT_SHARDING, x.shape):
+        return jax.lax.with_sharding_constraint(x, ACT_SHARDING)
+    return x
+
+
+def _constrain_moe(x):
+    if MOE_SHARDING is not None and x.ndim == 3 \
+            and _spec_fits(MOE_SHARDING, x.shape):
+        return jax.lax.with_sharding_constraint(x, MOE_SHARDING)
+    return x
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    mlp: str = "swiglu"            # swiglu | gelu | relu2
+    attn: str = "gqa"              # gqa | mla
+    # --- MLA (DeepSeek) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    shared_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # --- extras ---
+    mtp_depth: int = 0
+    rope_theta: float = 10000.0
+    attn_chunk: int = 0            # q-chunked attention (0 = full scores)
+    ce_chunk: int = 0              # seq-chunked cross-entropy (0 = full logits)
+    norm_eps: float = 1e-5
+    vocab_pad_to: int = 128
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def q_dim(self) -> int:
+        if self.attn == "mla":
+            return self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+        return self.n_heads * self.d_head
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        c = self
+        d = c.d_model
+        n = c.padded_vocab * d  # embed
+        if not c.tie_embeddings:
+            n += c.padded_vocab * d
+        per_layer_attn = 0
+        if c.attn == "mla":
+            qin = c.q_lora_rank or d
+            if c.q_lora_rank:
+                per_layer_attn += d * c.q_lora_rank + c.q_lora_rank  # + norm
+            per_layer_attn += qin * c.n_heads * (c.qk_nope_dim + c.qk_rope_dim)
+            per_layer_attn += d * (c.kv_lora_rank + c.qk_rope_dim)
+            per_layer_attn += c.kv_lora_rank  # kv_norm
+            per_layer_attn += c.kv_lora_rank * c.n_heads * (c.qk_nope_dim + c.v_head_dim)
+            per_layer_attn += c.n_heads * c.v_head_dim * d
+        else:
+            per_layer_attn += d * c.n_heads * c.d_head
+            per_layer_attn += 2 * d * c.n_kv_heads * c.d_head
+            per_layer_attn += c.n_heads * c.d_head * d
+
+        def mlp_params(ff):
+            return (3 if c.mlp == "swiglu" else 2) * d * ff
+
+        total_layers = 0
+        for li in range(c.n_layers):
+            total_layers += per_layer_attn + 2 * d  # norms
+            if c.moe and li >= c.first_dense_layers:
+                total_layers += d * c.n_experts  # router
+                total_layers += c.n_experts * mlp_params(c.moe_d_ff)
+                total_layers += mlp_params(c.shared_d_ff) * (1 if c.n_shared_experts else 0)
+            else:
+                total_layers += mlp_params(c.d_ff)
+        n += total_layers + d  # final norm
+        if c.mtp_depth:        # MTP: concat proj + one dense block
+            n += 2 * d * d + per_layer_attn + mlp_params(c.d_ff) + 2 * d
+        return n
+
+    def active_params(self) -> int:
+        """Params active per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.n_params()
+        c = self
+        d = c.d_model
+
+        def mlp_params(ff):
+            return (3 if c.mlp == "swiglu" else 2) * d * ff
+
+        dense_all = self.n_params()
+        moe_layers = c.n_layers - c.first_dense_layers
+        inactive = moe_layers * (c.n_experts - c.top_k) * mlp_params(c.moe_d_ff)
+        return dense_all - inactive
+
+
+# ---------------------------------------------------------------------------
+# parameter init (layer-stacked)
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _mlp_init(key, d, ff, mlp, dtype, stack=()):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": _dense(ks[0], (*stack, d, ff), dtype),
+         "w_out": _dense(ks[1], (*stack, ff, d), dtype)}
+    if mlp == "swiglu":
+        p["w_gate"] = _dense(ks[2], (*stack, d, ff), dtype)
+    return p
+
+
+def _attn_init(key, cfg: LMConfig, dtype, stack=()):
+    c = cfg
+    d = c.d_model
+    ks = jax.random.split(key, 6)
+    if c.attn == "mla":
+        qin = c.q_lora_rank or d
+        p = {}
+        if c.q_lora_rank:
+            p["wq_a"] = _dense(ks[0], (*stack, d, c.q_lora_rank), dtype)
+            p["q_norm"] = jnp.ones((*stack, c.q_lora_rank), dtype)
+        p["wq_b"] = _dense(ks[1], (*stack, qin, c.n_heads * (c.qk_nope_dim + c.qk_rope_dim)), dtype)
+        p["wkv_a"] = _dense(ks[2], (*stack, d, c.kv_lora_rank + c.qk_rope_dim), dtype)
+        p["kv_norm"] = jnp.ones((*stack, c.kv_lora_rank), dtype)
+        p["wkv_b"] = _dense(ks[3], (*stack, c.kv_lora_rank,
+                                    c.n_heads * (c.qk_nope_dim + c.v_head_dim)), dtype)
+        p["wo"] = _dense(ks[4], (*stack, c.n_heads * c.v_head_dim, d), dtype)
+        return p
+    return {
+        "wq": _dense(ks[0], (*stack, d, c.n_heads * c.d_head), dtype),
+        "wk": _dense(ks[1], (*stack, d, c.n_kv_heads * c.d_head), dtype),
+        "wv": _dense(ks[2], (*stack, d, c.n_kv_heads * c.d_head), dtype),
+        "wo": _dense(ks[3], (*stack, c.n_heads * c.d_head, d), dtype),
+    }
+
+
+def _layer_init(key, cfg: LMConfig, moe: bool, stack=()):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {"attn": _attn_init(ks[0], cfg, dtype, stack),
+         "ln1": jnp.ones((*stack, cfg.d_model), dtype),
+         "ln2": jnp.ones((*stack, cfg.d_model), dtype)}
+    if moe:
+        p["router"] = _dense(ks[1], (*stack, cfg.d_model, cfg.n_experts), dtype)
+        p["experts"] = _mlp_init(ks[2], cfg.d_model, cfg.moe_d_ff, cfg.mlp,
+                                 dtype, stack=(*stack, cfg.n_experts))
+        if cfg.n_shared_experts:
+            p["shared"] = _mlp_init(ks[3], cfg.d_model,
+                                    cfg.shared_d_ff or cfg.moe_d_ff * cfg.n_shared_experts,
+                                    cfg.mlp, dtype, stack=stack)
+    else:
+        p["mlp"] = _mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype, stack=stack)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    params = {
+        "embed": _dense(ks[0], (cfg.padded_vocab, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(ks[1], (cfg.d_model, cfg.padded_vocab), dtype)
+    if n_dense:
+        params["dense_layers"] = _layer_init(ks[2], cfg, moe=False, stack=(n_dense,))
+    if n_moe:
+        params["moe_layers"] = _layer_init(ks[3], cfg, moe=True, stack=(n_moe,))
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": _dense(ks[4], (2 * cfg.d_model, cfg.d_model), dtype),
+            "block": _layer_init(ks[5], cfg, moe=False, stack=()),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(positions, dim, theta):
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., n_heads, dim); cos/sin: (..., dim/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def _act(x, kind):
+    if kind == "swiglu":
+        raise RuntimeError("handled in _mlp")
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def _mlp(p, x, kind):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+    return _act(x @ p["w_in"], kind) @ p["w_out"]
+
+
+def _sdpa(q, k, v, scale, q_start, *, chunk: int = 0):
+    """q: (B,S,H,dh) k/v: (B,T,Hkv,dh). Grouped-head GQA — KV never repeated
+    in memory (matters at 500k-token caches).
+
+    Causal mask is implicit: col <= q_start + row (never materialized dense).
+    chunk > 0 scans over q chunks so peak score memory is (chunk, T) — the
+    XLA-level flash-attention adaptation used for 32k prefill; the Pallas
+    kernel (kernels/flash_attention) replaces it on real TPUs.
+    """
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    T = k.shape[1]
+    q_start = jnp.asarray(q_start, jnp.int32)
+
+    def block(qb, row0):
+        # qb: (B, cs, Hkv, G, dh); row0: scalar first row index
+        cs = qb.shape[1]
+        scores = jnp.einsum("bskgd,btkd->bkgst", qb, k) * scale
+        rows = q_start + row0 + jnp.arange(cs)[:, None]
+        cols = jnp.arange(T)[None, :]
+        mask = cols <= rows                                 # (cs, T)
+        scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                           -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qb.dtype)
+        return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+    qg = q.reshape(B, S, Hkv, G, dh)
+    if chunk and S > chunk and S % chunk == 0:
+        n = S // chunk
+        qs = qg.reshape(B, n, chunk, Hkv, G, dh).transpose(1, 0, 2, 3, 4, 5)
+        row0s = jnp.arange(n) * chunk
+        outs = jax.lax.map(lambda xs: block(xs[0], xs[1]), (qs, row0s))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hkv, G, -1)
+    else:
+        out = block(qg, jnp.int32(0))
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def _decode_attn_split_kv(q, ck, cv, cur, scale):
+    """Flash-decoding across the model axis: KV stays seq-sharded, softmax
+    combines with per-shard (max, denom, weighted value) partials."""
+    from jax.sharding import PartitionSpec as P
+    info = DECODE_SHARD_MAP
+    mesh, dp, mdl = info["mesh"], info["dp"], info["model"]
+    B, _, H, dh = q.shape
+    Hkv = ck.shape[2]
+    G = H // Hkv
+
+    b_ax = dp if B > 1 else None
+    t_ax = mdl if B > 1 else (*((dp,) if not isinstance(dp, tuple) else dp),
+                              mdl)
+    comb = t_ax  # the axes the KV sequence is split over
+
+    def kernel(q_loc, k_loc, v_loc, cur):
+        t_loc = k_loc.shape[1]
+        # global offset of this device's KV slice along the combined axes
+        off = jnp.int32(0)
+        axes = comb if isinstance(comb, tuple) else (comb,)
+        for a in axes:
+            off = off * mesh.shape[a] + jax.lax.axis_index(a)
+        qg = q_loc.reshape(-1, 1, Hkv, G, dh)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k_loc).astype(jnp.float32) \
+            * scale                                   # (B,k,g,1,Tloc)
+        cols = off * t_loc + jnp.arange(t_loc)
+        s = jnp.where(cols[None, None, None, None, :] <= cur, s, -1e30)
+        m = s.max(axis=-1)                            # (B,k,g,1)
+        m_g = jax.lax.pmax(m, comb)
+        p = jnp.exp(s - m_g[..., None])
+        l_g = jax.lax.psum(p.sum(axis=-1), comb)      # (B,k,g,1)
+        o = jnp.einsum("bkgst,btkd->bskgd", p.astype(v_loc.dtype), v_loc)
+        o_g = jax.lax.psum(o, comb)                   # (B,1,k,g,dh)
+        out = o_g / jnp.maximum(
+            l_g.transpose(0, 3, 1, 2)[..., None], 1e-30).astype(o_g.dtype)
+        return out.reshape(-1, 1, H, dh)
+    return jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(b_ax, None, None, None), P(b_ax, t_ax, None, None),
+                  P(b_ax, t_ax, None, None), P()),
+        out_specs=P(b_ax, None, None, None), check_vma=False,
+    )(q, ck, cv, jnp.asarray(cur, jnp.int32))
+
+
+def _mla_decode_split_kv(cfg, q_nope, q_rope, cc, cr, wkv_b, cur):
+    """Flash-decoding for the absorbed-MLA path: the latent cache stays
+    seq-sharded; per-shard (max, denom, partial latent context) combine with
+    one pmax + two psums of (B, H, ·) — the wkv_b slice is gathered once
+    (33 MB/layer on deepseek-v3) instead of the 155 GB/step the SPMD
+    partitioner moves (§Perf iteration C3)."""
+    from jax.sharding import PartitionSpec as P
+    c = cfg
+    info = DECODE_SHARD_MAP
+    mesh, dp, mdl = info["mesh"], info["dp"], info["model"]
+    B = q_nope.shape[0]
+    H = c.n_heads
+    scale = 1.0 / np.sqrt(c.qk_nope_dim + c.qk_rope_dim)
+    b_ax = dp if B > 1 else None
+    t_ax = mdl if B > 1 else (*((dp,) if not isinstance(dp, tuple) else dp),
+                              mdl)
+    comb = t_ax
+
+    def kernel(qn, qr, cc_loc, cr_loc, w, cur):
+        # gather the model-sharded head dim of wkv_b (ZeRO-style, explicit)
+        if w.shape[1] != c.n_heads * (c.qk_nope_dim + c.v_head_dim):
+            w = jax.lax.all_gather(w, mdl, axis=1, tiled=True)
+        w = w.reshape(c.kv_lora_rank, H, c.qk_nope_dim + c.v_head_dim)
+        w_uk, w_uv = w[..., :c.qk_nope_dim], w[..., c.qk_nope_dim:]
+
+        t_loc = cc_loc.shape[1]
+        off = jnp.int32(0)
+        axes = comb if isinstance(comb, tuple) else (comb,)
+        for a in axes:
+            off = off * mesh.shape[a] + jax.lax.axis_index(a)
+        q_lat = jnp.einsum("bshd,lhd->bshl", qn, w_uk)       # (B,1,H,latent)
+        s = (jnp.einsum("bshl,btl->bhst", q_lat, cc_loc)
+             + jnp.einsum("bshr,btur->bhst", qr, cr_loc)
+             ).astype(jnp.float32) * scale                   # (B,H,1,Tloc)
+        cols = off * t_loc + jnp.arange(t_loc)
+        s = jnp.where(cols[None, None, None, :] <= cur, s, -1e30)
+        m_g = jax.lax.pmax(s.max(axis=-1), comb)             # (B,H,1)
+        p = jnp.exp(s - m_g[..., None])
+        l_g = jax.lax.psum(p.sum(axis=-1), comb)             # (B,H,1)
+        ctx = jax.lax.psum(
+            jnp.einsum("bhst,btl->bshl", p.astype(cc_loc.dtype), cc_loc),
+            comb)                                            # (B,1,H,latent)
+        out = jnp.einsum("bshl,lhd->bshd", ctx, w_uv)
+        return out / jnp.maximum(
+            l_g.transpose(0, 2, 1)[:, :, :, None], 1e-30).astype(out.dtype)
+
+    return jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
+                  P(b_ax, t_ax, None), P(b_ax, t_ax, None, None),
+                  P(None, mdl), P()),
+        out_specs=P(b_ax, None, None, None), check_vma=False,
+    )(q_nope, q_rope, cc, cr, wkv_b, jnp.asarray(cur, jnp.int32))
+
+
+def _gqa_attention(p, cfg: LMConfig, x, positions, q_start, cache=None):
+    B, S, D = x.shape
+    c = cfg
+    q = (x @ p["wq"]).reshape(B, S, c.n_heads, c.d_head)
+    k = (x @ p["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
+    v = (x @ p["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
+    cos, sin = rope_freqs(positions, c.d_head, c.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    new_cache = None
+    if cache is not None:
+        ck, cv, cur = cache  # (B,T,Hkv,dh) x2, scalar cur length
+        if CACHE_UPDATE == "masked" and S == 1:
+            sel = (jnp.arange(ck.shape[1]) == cur)[None, :, None, None]
+            ck = jnp.where(sel, k.astype(ck.dtype), ck)
+            cv = jnp.where(sel, v.astype(cv.dtype), cv)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, cur, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, cur, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    if cache is not None and S == 1 and DECODE_SHARD_MAP is not None:
+        out = _decode_attn_split_kv(q, k, v, cache[2],
+                                    1.0 / np.sqrt(c.d_head))
+    else:
+        out = _sdpa(q, k, v, 1.0 / np.sqrt(c.d_head), q_start,
+                    chunk=c.attn_chunk)
+    out = out.reshape(B, S, c.n_heads * c.d_head) @ p["wo"]
+    return out, new_cache
+
+
+def _mla_attention(p, cfg: LMConfig, x, positions, q_start, cache=None):
+    """DeepSeek MLA with compressed-KV cache (c_kv + decoupled rope key)."""
+    c = cfg
+    B, S, D = x.shape
+    qin = rmsnorm(x @ p["wq_a"], p["q_norm"], c.norm_eps) if c.q_lora_rank else x
+    q = (qin @ p["wq_b"]).reshape(B, S, c.n_heads, c.qk_nope_dim + c.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [c.qk_nope_dim], axis=-1)
+    kv_a = x @ p["wkv_a"]                          # (B,S,kv_lora+rope)
+    c_kv, k_rope = jnp.split(kv_a, [c.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"], c.norm_eps)
+    cos, sin = rope_freqs(positions, c.qk_rope_dim, c.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,S,1,rope)
+
+    new_cache = None
+    if cache is not None:
+        cc, cr, cur = cache   # (B,T,kv_lora), (B,T,1,rope)
+        if CACHE_UPDATE == "masked" and S == 1:
+            sel = (jnp.arange(cc.shape[1]) == cur)[None, :]
+            cc = jnp.where(sel[..., None], c_kv.astype(cc.dtype), cc)
+            cr = jnp.where(sel[..., None, None], k_rope.astype(cr.dtype), cr)
+        else:
+            cc = jax.lax.dynamic_update_slice(cc, c_kv, (0, cur, 0))
+            cr = jax.lax.dynamic_update_slice(cr, k_rope, (0, cur, 0, 0))
+        c_kv, k_rope = cc, cr
+        new_cache = (cc, cr)
+
+    scale = 1.0 / np.sqrt(c.qk_nope_dim + c.qk_rope_dim)
+    if cache is not None and S == 1 and DECODE_SHARD_MAP is not None:
+        # §Perf C3: split-KV absorbed decode over the seq-sharded latent cache
+        out = _mla_decode_split_kv(c, q_nope, q_rope, c_kv, k_rope,
+                                   p["wkv_b"], cache[2])
+        out = out.reshape(B, S, c.n_heads * c.v_head_dim) @ p["wo"]
+        return out, new_cache
+    if cache is not None and S == 1:
+        # absorbed decode: attention runs in the latent space — the per-token
+        # K/V (B,T,H,·) tensors are never materialized (DeepSeek-V2 §"matrix
+        # absorption"). Memory per layer stays O(B*T*kv_lora).
+        w_uk, w_uv = jnp.split(
+            p["wkv_b"].reshape(c.kv_lora_rank, c.n_heads,
+                               c.qk_nope_dim + c.v_head_dim),
+            [c.qk_nope_dim], axis=-1)
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)       # (B,1,H,latent)
+        s_lat = jnp.einsum("bshl,btl->bhst", q_lat, c_kv)
+        s_rope = jnp.einsum("bshr,btur->bhst", q_rope, k_rope)
+        scores = (s_lat + s_rope) * scale
+        cols = jnp.arange(c_kv.shape[1])[None, None, None, :]
+        scores = jnp.where(cols <= jnp.asarray(q_start, jnp.int32),
+                           scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btl->bshl", probs, c_kv)
+        out = jnp.einsum("bshl,lhd->bshd", ctx_lat, w_uv)
+    else:
+        kv = (c_kv @ p["wkv_b"]).reshape(B, c_kv.shape[1], c.n_heads,
+                                         c.qk_nope_dim + c.v_head_dim)
+        k_nope, v = jnp.split(kv, [c.qk_nope_dim], axis=-1)
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope, (*k_nope.shape[:3], c.qk_rope_dim))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(q_full, k, v, scale, q_start, chunk=c.attn_chunk)
+    out = out.reshape(B, S, c.n_heads * c.v_head_dim) @ p["wo"]
+    return out, new_cache
+
+
+def _moe_mlp_ep_shard_map(p, cfg: LMConfig, xt, gates, idx):
+    """Routed experts under explicit shard_map (see MOE_SHARD_MAP).
+
+    Two modes sharing one kernel:
+      EP (E %% model == 0, deepseek): each model column owns E/16 experts and
+      routes only its local tokens to them;
+      expert-TP (qwen2-moe, 60 experts): every column holds all experts but a
+      d_ff/16 slice, computing PARTIAL expert outputs.
+    In both, the per-slot outputs are combined back to tokens BEFORE the
+    model-axis psum (the combine is linear, so it commutes with the partial
+    sum) — the collective is always one (T_loc, D) psum per layer instead of
+    the (E, cap, D) buffer the SPMD partitioner reduces (§Perf iteration A).
+    ZeRO-3 storage: the data-sharded weight dim is re-gathered inside with an
+    explicit all_gather whose transpose reduce-scatters the expert grads.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    c = cfg
+    info = MOE_SHARD_MAP
+    mesh, dp, mdl = info["mesh"], info["dp"], info["model"]
+    dp_t = dp if isinstance(dp, tuple) else (dp,)
+    n_cols = int(mesh.shape[mdl])
+    ep = c.n_experts % n_cols == 0
+    E_loc = c.n_experts // n_cols if ep else c.n_experts
+    T = xt.shape[0]
+    dp_sz = int(np.prod([mesh.shape[a] for a in dp_t]))
+    T_loc = T // dp_sz
+    cap = max(8, int(np.ceil(T_loc * c.top_k / c.n_experts
+                             * c.capacity_factor)))
+    cap = int(np.ceil(cap / 8)) * 8
+
+    def kernel(w_gate, w_in, w_out, x_loc, g_loc, i_loc):
+        j = jax.lax.axis_index(mdl)
+        # ZeRO-3 re-gather of the data-sharded weight dims
+        if w_in.shape[1] != c.d_model:
+            w_in = jax.lax.all_gather(w_in, dp_t, axis=1, tiled=True)
+            if w_gate is not None:
+                w_gate = jax.lax.all_gather(w_gate, dp_t, axis=1, tiled=True)
+        if ep:
+            if w_out.shape[1] * 1 != w_in.shape[2]:
+                w_out = jax.lax.all_gather(w_out, dp_t, axis=1, tiled=True)
+        else:
+            if w_out.shape[2] != c.d_model:
+                w_out = jax.lax.all_gather(w_out, dp_t, axis=2, tiled=True)
+
+        eid = i_loc.reshape(-1)                      # (T_loc*k,)
+        tok = jnp.arange(eid.shape[0]) // c.top_k
+        if ep:
+            local_e = eid - j * E_loc
+            mine = (local_e >= 0) & (local_e < E_loc)
+        else:
+            local_e = eid
+            mine = jnp.ones_like(eid, dtype=bool)
+        key = jnp.where(mine, local_e, E_loc).astype(jnp.int32)
+        order = jnp.argsort(key)
+        sorted_key = key[order]
+        starts = jnp.searchsorted(sorted_key, jnp.arange(E_loc))
+        pos_sorted = jnp.arange(eid.shape[0]) - starts[
+            jnp.clip(sorted_key, 0, E_loc - 1)]
+        pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+        keep = mine & (pos < cap)
+        e_safe = jnp.where(keep, local_e, 0)
+        p_safe = jnp.where(keep, pos, 0)
+
+        buf = jnp.zeros((E_loc, cap, c.d_model), x_loc.dtype)
+        buf = buf.at[e_safe, p_safe].add(
+            jnp.where(keep[:, None], x_loc[tok], 0))
+        if c.mlp == "swiglu":
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) \
+                * jnp.einsum("ecd,edf->ecf", buf, w_in)
+        else:
+            h = _act(jnp.einsum("ecd,edf->ecf", buf, w_in), c.mlp)
+        out_e = jnp.einsum("ecf,efd->ecd", h, w_out)  # partial iff not ep
+        gath = out_e[e_safe, p_safe] * keep[:, None]
+        comb = (gath.reshape(T_loc, c.top_k, c.d_model)
+                * g_loc[..., None]).sum(axis=1)
+        return jax.lax.psum(comb, mdl)               # (T_loc, D)
+
+    w_gate = p["experts"].get("w_gate")
+    if ep:
+        # storage (rules.py EP branch): (E@model, dim1@data, ·)
+        win_spec = wgate_spec = wout_spec = P(mdl, dp, None)
+    else:
+        # storage (rules.py expert-TP branch): w_in (E, D@data, F@model),
+        # w_out (E, F@model, D@data)
+        win_spec = wgate_spec = P(None, dp, mdl)
+        wout_spec = P(None, mdl, dp)
+    return jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(wgate_spec, win_spec, wout_spec,
+                  P(dp, None), P(dp, None), P(dp, None)),
+        out_specs=P(dp, None), check_vma=False,
+    )(w_gate, p["experts"]["w_in"], p["experts"]["w_out"], xt, gates, idx)
+
+
+def _moe_mlp(p, cfg: LMConfig, x):
+    """Capacity-bounded top-k MoE with scatter dispatch (no [T,E,C] one-hot)."""
+    c = cfg
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt @ p["router"]).astype(jnp.float32)            # (T, E)
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), c.top_k)
+    gates = (gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    if MOE_SHARD_MAP is not None:
+        info = MOE_SHARD_MAP
+        dp_t = info["dp"] if isinstance(info["dp"], tuple) else (info["dp"],)
+        dp_sz = int(np.prod([info["mesh"].shape[a] for a in dp_t]))
+        ep_ok = T % dp_sz == 0        # decode at B=1 falls back to SPMD
+        if ep_ok:
+            comb = _moe_mlp_ep_shard_map(p, cfg, xt, gates, idx)
+            if c.n_shared_experts:
+                comb = comb + _mlp(p["shared"], xt, c.mlp)
+            return comb.reshape(B, S, D)
+
+    E = c.n_experts
+    cap = int(np.ceil(T * c.top_k / E * c.capacity_factor))
+    cap = max(8, min(cap, T))
+    if T >= 4096:  # production shapes: keep the slot dim mesh-divisible
+        cap = int(np.ceil(cap / 512)) * 512
+    # position of each (token, k) within its expert via sort-based ranking
+    # (the one-hot cumsum alternative materializes (T*k, E) and costs ~100x
+    # the expert matmuls at 4k seq — measured in EXPERIMENTS.md §Perf)
+    eid = idx.reshape(T * c.top_k)
+    order = jnp.argsort(eid)                                    # stable
+    sorted_eid = eid[order]
+    starts = jnp.searchsorted(sorted_eid, jnp.arange(E))        # (E,)
+    pos_sorted = jnp.arange(T * c.top_k) - starts[sorted_eid]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)  # (T*k,)
+    keep = pos < cap
+
+    # scatter tokens into (E, cap, D)
+    xk = jnp.repeat(xt, c.top_k, axis=0)                        # (T*k, D)
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    e_safe = jnp.where(keep, eid, 0)
+    p_safe = jnp.where(keep, pos, 0)
+    buf = buf.at[e_safe, p_safe].add(jnp.where(keep[:, None], xk, 0))
+    buf = _constrain_moe(buf)
+
+    def _w(name):
+        w = p["experts"][name]
+        spec = MOE_WOUT_SHARDING if name == "w_out" else MOE_WIN_SHARDING
+        if spec is not None and _spec_fits(spec, w.shape):
+            w = jax.lax.with_sharding_constraint(w, spec)   # ZeRO-3 gather
+        return w
+
+    # expert MLPs: (E, cap, D) x (E, D, F)
+    if c.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, _w("w_gate"))) \
+            * jnp.einsum("ecd,edf->ecf", buf, _w("w_in"))
+    else:
+        h = _act(jnp.einsum("ecd,edf->ecf", buf, _w("w_in")), c.mlp)
+    # h's d_ff dim stays model-sharded under expert-TP; only the (·, cap, D)
+    # tensors are pinned (correct for both EP and expert-TP)
+    out_e = _constrain_moe(jnp.einsum("ecf,efd->ecd", h, _w("w_out")))
+
+    # gather back + combine
+    gath = out_e[e_safe, p_safe] * keep[:, None]                # (T*k, D)
+    comb = (gath.reshape(T, c.top_k, D)
+            * gates[..., None]).sum(axis=1)
+
+    if c.n_shared_experts:
+        comb = comb + _mlp(p["shared"], xt, c.mlp)
+    return comb.reshape(B, S, D)
+
+
+def _layer_fwd(p, cfg: LMConfig, x, positions, q_start, moe: bool, cache=None):
+    x = _constrain_act(x)
+    attn_fn = _mla_attention if cfg.attn == "mla" else _gqa_attention
+    h, new_cache = attn_fn(p["attn"], cfg, rmsnorm(x, p["ln1"], cfg.norm_eps),
+                           positions, q_start, cache)
+    x = _constrain_act(x + h)
+    z = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = _constrain_act(x + (_moe_mlp(p, cfg, z) if moe
+                            else _mlp(p["mlp"], z, cfg.mlp)))
+    return x, new_cache
+
+
+def _scan_layers(stacked, cfg, x, positions, q_start, moe, remat=False):
+    fn = partial(_layer_fwd, cfg=cfg, positions=positions, q_start=q_start,
+                 moe=moe)
+
+    def body(x, layer_p):
+        out, _ = fn(layer_p, x=x)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda carry, lp: body(carry, lp), x, stacked)
+    return x
+
+
+def forward(params, cfg: LMConfig, tokens, *, remat: bool = False):
+    """tokens (B, S) -> logits (B, S, padded_vocab)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    if "dense_layers" in params:
+        x = _scan_layers(params["dense_layers"], cfg, x, positions, 0,
+                         moe=False, remat=remat)
+    if "moe_layers" in params:
+        x = _scan_layers(params["moe_layers"], cfg, x, positions, 0,
+                         moe=True, remat=remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def hidden_forward(params, cfg: LMConfig, tokens, *, remat: bool = False):
+    """tokens (B, S) -> final hidden states (B, S, D) (pre-head)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    if "dense_layers" in params:
+        x = _scan_layers(params["dense_layers"], cfg, x, positions, 0,
+                         moe=False, remat=remat)
+    if "moe_layers" in params:
+        x = _scan_layers(params["moe_layers"], cfg, x, positions, 0,
+                         moe=True, remat=remat)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def ce_from_hidden(x, head, labels, cfg: LMConfig):
+    """Cross-entropy from final hidden states, optionally seq-chunked.
+
+    ce_chunk > 0 never materializes the full (B, S, V) logits: a checkpointed
+    lax.map over sequence chunks computes per-chunk logits, reduces to
+    (nll_sum, count), and recomputes the chunk in backward — peak memory
+    drops from O(B*S*V) to O(B*chunk*V) at identical FLOPs (§Perf iteration).
+    """
+    if not cfg.ce_chunk or x.shape[1] % cfg.ce_chunk != 0:
+        logits = (x @ head).astype(jnp.float32)
+        return _ce(logits, labels, cfg)
+    B, S, D = x.shape
+    n = S // cfg.ce_chunk
+    xc = x.reshape(B, n, cfg.ce_chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, cfg.ce_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk(args):
+        xb, lb = args
+        logits = (xb @ head).astype(jnp.float32)
+        V = logits.shape[-1]
+        mask = lb >= 0
+        safe = jnp.where(mask, lb, 0)
+        logz = jax.nn.logsumexp(
+            jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -1e30), axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        return nll.sum(), mask.sum()
+
+    sums, counts = jax.lax.map(chunk, (xc, lc))
+    return sums.sum() / jnp.clip(counts.sum(), 1)
+
+
+def loss_fn(params, cfg: LMConfig, tokens, labels, *, remat: bool = False):
+    """Causal LM loss; labels == -100 masked; pad-vocab ids masked out.
+
+    Returns (loss, metrics). MTP adds the DeepSeek-V3 next-next-token term.
+    """
+    x = hidden_forward(params, cfg, tokens, remat=remat)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    main = ce_from_hidden(x, head, labels, cfg)
+    metrics = {"ce": main}
+    loss = main
+    if cfg.mtp_depth and "mtp" in params:
+        # 1-depth MTP: re-embed shifted tokens, one extra block, shared head
+        B, S = tokens.shape
+        h = params["embed"][tokens]
+        nxt = jnp.roll(tokens, -1, axis=1)
+        h2 = jnp.concatenate([h, params["embed"][nxt]], axis=-1) @ params["mtp"]["proj"]
+        positions = jnp.arange(S)[None, :]
+        h2, _ = _layer_fwd(params["mtp"]["block"], cfg, h2, positions, 0, moe=False)
+        mtp = ce_from_hidden(h2, head, jnp.roll(labels, -1, axis=1), cfg)
+        loss = loss + 0.3 * mtp
+        metrics["mtp_ce"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _ce(logits, labels, cfg: LMConfig):
+    V = logits.shape[-1]
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(
+        jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -1e30), axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.clip(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Stacked per-layer KV cache. MLA stores the compressed latent."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+
+    def mk(n):
+        if n == 0:
+            return None
+        if cfg.attn == "mla":
+            return (jnp.zeros((n, batch, max_len, cfg.kv_lora_rank), dt),
+                    jnp.zeros((n, batch, max_len, 1, cfg.qk_rope_dim), dt))
+        return (jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.d_head), dt),
+                jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.d_head), dt))
+
+    return {"dense": mk(n_dense), "moe": mk(n_moe)}
+
+
+def _decode_stack(stacked_params, stacked_cache, cfg, x, positions, q_start,
+                  cur_len, moe):
+    def body(x, inp):
+        layer_p, ca, cb = inp
+        out, new_cache = _layer_fwd(layer_p, cfg, x, positions, q_start, moe,
+                                    cache=(ca, cb, cur_len))
+        return out, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked_params, *stacked_cache))
+    return x, new_caches
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens, cur_len):
+    """One decode step. tokens (B, 1); cache from init_cache; cur_len scalar.
+
+    Returns (logits (B, 1, V), new_cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = jnp.full((B, 1), cur_len, jnp.int32)
+    new_cache = {"dense": None, "moe": None}
+    if "dense_layers" in params:
+        x, nc = _decode_stack(params["dense_layers"], cache["dense"], cfg, x,
+                              positions, cur_len, cur_len, moe=False)
+        new_cache["dense"] = nc
+    if "moe_layers" in params:
+        x, nc = _decode_stack(params["moe_layers"], cache["moe"], cfg, x,
+                              positions, cur_len, cur_len, moe=True)
+        new_cache["moe"] = nc
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+def prefill(params, cfg: LMConfig, tokens, max_len: int | None = None):
+    """Prefill pass returning logits and a populated cache."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    cache = init_cache(cfg, B, max_len)
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    new_cache = {"dense": None, "moe": None}
+    if "dense_layers" in params:
+        x, nc = _decode_stack(params["dense_layers"], cache["dense"], cfg, x,
+                              positions, 0, jnp.int32(0), moe=False)
+        new_cache["dense"] = nc
+    if "moe_layers" in params:
+        x, nc = _decode_stack(params["moe_layers"], cache["moe"], cfg, x,
+                              positions, 0, jnp.int32(0), moe=True)
+        new_cache["moe"] = nc
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache

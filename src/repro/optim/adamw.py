@@ -1,0 +1,54 @@
+"""AdamW in pure JAX, with the memory knobs big-model training needs:
+moments_dtype (bf16 halves optimizer HBM — the deepseek-v3 default) and
+global-norm clipping. State is a pytree mirroring params, so PartitionSpecs
+apply 1:1 (ZeRO: the moments inherit the params' sharding)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, moments_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, moments_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12)) \
+        if clip_norm else 1.0
+    corr1 = 1.0 - b1 ** step.astype(jnp.float32)
+    corr2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g * g * (1 - b2)
+        u = (m32 / corr1) / (jnp.sqrt(v32 / corr2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * u
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}, \
+        {"grad_norm": gn}

@@ -1,0 +1,33 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+Quantize grads to int8 with a per-tensor scale before the data-parallel
+all-reduce, carry the quantization residual into the next step (error
+feedback, Seide et al. 2014 / EF-SGD): 4x less DP collective traffic at
+equal asymptotic convergence. Off by default; enabled per-config
+(grad_compression="int8_ef"). Convergence covered by tests/test_optim.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_compress(grads, residual):
+    """Returns (int8 tree, scales tree, new residual carried locally)."""
+    def comp(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+    out = jax.tree.map(comp, grads, residual)
+    tup = lambda i: jax.tree.map(lambda t: t[i], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return tup(0), tup(1), tup(2)
+
+
+def ef_decompress(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

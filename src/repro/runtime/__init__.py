@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainTask
+
+__all__ = ["Trainer", "TrainTask"]

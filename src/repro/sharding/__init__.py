@@ -1,0 +1,5 @@
+from repro.sharding.rules import (make_param_specs, lm_rules, gnn_rules,
+                                  recsys_rules, batch_axis)
+
+__all__ = ["make_param_specs", "lm_rules", "gnn_rules", "recsys_rules",
+           "batch_axis"]

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests must see the
+real single CPU device; only launch/dryrun.py forces 512 virtual devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def lubm_small():
+    from repro.kg.generator import generate_lubm
+    return generate_lubm(1, scale=0.2, seed=0)
+
+
+@pytest.fixture(scope="session")
+def bsbm_small():
+    from repro.kg.generator import generate_bsbm
+    return generate_bsbm(120, seed=0)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,50 @@
+"""Data pipelines: samplers, graph batches, determinism."""
+import numpy as np
+
+from repro.data.graphs import (CSRGraph, make_graph_batch, neighbor_sample,
+                               synthetic_graph)
+from repro.data.recsys import click_batches
+from repro.data.tokens import token_batches
+
+
+def test_neighbor_sampler_fanout_bounds():
+    s, r = synthetic_graph(500, 4000, seed=0)
+    csr = CSRGraph.from_edges(s, r, 500)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(500, 16, replace=False)
+    nodes, ls, lr = neighbor_sample(csr, seeds, [5, 3], rng)
+    # every edge endpoint is a sampled node (local index space)
+    assert ls.max(initial=0) < len(nodes) and lr.max(initial=0) < len(nodes)
+    # seed fanout bound: each seed has <= 5 sampled in-edges at layer 1
+    seed_set = set(range(len(seeds)))
+    deg = {}
+    for a, b in zip(ls, lr):
+        if b in seed_set:
+            deg[b] = deg.get(b, 0) + 1
+    assert all(v <= 5 for v in deg.values())
+    # edges are real graph edges
+    edge_set = {(int(a), int(b)) for a, b in zip(s, r)}
+    for a, b in zip(ls, lr):
+        assert (int(nodes[a]), int(nodes[b])) in edge_set
+
+
+def test_graph_batch_shapes_all_assigned_shapes():
+    for shape in ("full_graph_sm", "minibatch_lg", "molecule"):
+        g = make_graph_batch(shape, d_feat=16, n_classes=4, reduced=True)
+        n, e = g.node_feat.shape[0], g.senders.shape[0]
+        assert g.positions.shape == (n, 3)
+        assert g.receivers.shape == (e,) and g.edge_mask.shape == (e,)
+        assert int(g.senders.max()) < n and int(g.receivers.max()) < n
+        assert bool(g.node_mask.any())
+
+
+def test_pipelines_deterministic():
+    a = [b["tokens"] for _, b in zip(range(3), token_batches(100, 4, 8,
+                                                             seed=5))]
+    b = [b["tokens"] for _, b in zip(range(3), token_batches(100, 4, 8,
+                                                             seed=5))]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c1 = next(click_batches([100] * 5, 3, 16, seed=2))
+    c2 = next(click_batches([100] * 5, 3, 16, seed=2))
+    np.testing.assert_array_equal(c1["sparse"], c2["sparse"])

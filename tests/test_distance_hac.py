@@ -1,0 +1,66 @@
+"""Jaccard distance + HAC properties (hypothesis) and numpy-vs-JAX parity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distance import jaccard_distance_from_membership
+from repro.core.hac import LINKAGES, cut, linkage_jax, linkage_numpy
+
+
+@st.composite
+def membership(draw):
+    q = draw(st.integers(2, 12))
+    f = draw(st.integers(1, 20))
+    bits = draw(st.lists(st.booleans(), min_size=q * f, max_size=q * f))
+    return np.asarray(bits, dtype=np.float64).reshape(q, f)
+
+
+@given(membership())
+@settings(max_examples=40, deadline=None)
+def test_jaccard_properties(m):
+    d = jaccard_distance_from_membership(m)
+    assert np.allclose(d, d.T)
+    assert np.all(d >= -1e-12) and np.all(d <= 1 + 1e-12)
+    assert np.allclose(np.diag(d), 0.0)
+    # identical rows -> distance 0
+    for i in range(m.shape[0]):
+        for j in range(m.shape[0]):
+            if np.array_equal(m[i], m[j]):
+                assert d[i, j] == pytest.approx(0.0, abs=1e-12)
+
+
+@given(membership(), st.sampled_from(LINKAGES))
+@settings(max_examples=20, deadline=None)
+def test_linkage_numpy_vs_jax(m, link):
+    d = jaccard_distance_from_membership(m)
+    zn = linkage_numpy(d, link)
+    zj = linkage_jax(d, link)
+    # same merge distances (tie order may differ); sizes monotone-compatible
+    assert np.allclose(np.sort(zn[:, 2]), np.sort(zj[:, 2]), atol=1e-5)
+
+
+@given(membership())
+@settings(max_examples=20, deadline=None)
+def test_single_linkage_monotone(m):
+    d = jaccard_distance_from_membership(m)
+    z = linkage_numpy(d, "single")
+    assert np.all(np.diff(z[:, 2]) >= -1e-12)
+
+
+def test_cut_counts():
+    d = np.array([[0, .1, .9, .9], [.1, 0, .9, .9],
+                  [.9, .9, 0, .2], [.9, .9, .2, 0]])
+    z = linkage_numpy(d, "single")
+    labels = cut(z, 4, n_clusters=2)
+    assert len(set(labels)) == 2
+    assert labels[0] == labels[1] and labels[2] == labels[3]
+    labels3 = cut(z, 4, distance=0.15)
+    assert labels3[0] == labels3[1] and labels3[2] != labels3[3]
+
+
+def test_kernel_matches_oracle(rng):
+    from repro.kernels.jaccard.ops import jaccard_distance
+    m = (rng.uniform(size=(14, 37)) < 0.3).astype(np.float32)
+    d1 = np.asarray(jaccard_distance(m))
+    d2 = jaccard_distance_from_membership(m)
+    np.testing.assert_allclose(d1, d2, atol=1e-6)

@@ -1,0 +1,46 @@
+"""Dry-run integration: a fast cell compiles on the 512-virtual-device mesh.
+
+Runs in a subprocess because the dry-run forces
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before jax init; the
+main test process must keep its single real CPU device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(args, timeout=240):
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+    lines = [l for l in out.stdout.splitlines() if l.startswith("{")]
+    assert lines, out.stdout[-2000:] + out.stderr[-2000:]
+    return [json.loads(l) for l in lines]
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("gcn-cora", "molecule"),
+    ("xdeepfm", "serve_p99"),
+])
+def test_cell_compiles_single_pod(arch, shape):
+    recs = _run_cell(["--arch", arch, "--shape", shape])
+    rec = recs[0]
+    assert "error" not in rec, rec
+    assert rec["n_chips"] == 256
+    assert rec["flops"] > 0
+    assert rec["peak_bytes_per_device"] < 16e9
+
+
+def test_cell_compiles_multi_pod():
+    recs = _run_cell(["--arch", "gcn-cora", "--shape", "molecule",
+                      "--multipod"])
+    rec = recs[0]
+    assert "error" not in rec, rec
+    assert rec["n_chips"] == 512 and rec["mesh"] == "2x16x16"

@@ -1,0 +1,71 @@
+"""WawPart-style expert placement: load balance + co-fire locality."""
+import numpy as np
+
+from repro.core.expert_placement import (max_column_load, place_experts,
+                                         routing_stats)
+
+
+def _skewed_routing(E=64, T=20000, k=4, seed=0):
+    """Zipf-hot experts with correlated co-firing. Partners are id+E/2 so a
+    contiguous (naive) placement always splits them across columns."""
+    rng = np.random.default_rng(seed)
+    base = 1.0 / np.arange(1, E + 1) ** 1.2
+    ids = np.zeros((T, k), dtype=np.int64)
+    for t in range(T):
+        first = rng.choice(E, p=base / base.sum())
+        partner = (first + E // 2) % E
+        rest = rng.choice(E, size=k - 2, replace=False, p=base / base.sum())
+        ids[t] = [first, partner, *rest]
+    return ids
+
+
+def test_placement_balances_and_colocates():
+    E, n_cols = 64, 8
+    ids = _skewed_routing(E)
+    load, co = routing_stats(ids, E)
+    naive = np.arange(E)   # contiguous id-order placement (the default)
+    perm = place_experts(load, co, n_cols)
+
+    assert sorted(perm.tolist()) == list(range(E))  # a permutation
+    imb_naive = max_column_load(load, naive, n_cols)
+    imb_ww = max_column_load(load, perm, n_cols)
+    # hottest column's overload factor improves...
+    assert imb_ww < imb_naive, (imb_ww, imb_naive)
+    # ...to within 15% of the theoretical floor (a single zipf-hot expert
+    # exceeding the per-column budget bounds any placement from below)
+    floor = max(load.max() * n_cols / load.sum(), 1.0)
+    assert imb_ww < floor * 1.15, (imb_ww, floor)
+
+    # co-fire locality: tokens whose experts land on fewer columns
+    col_of = np.empty(E, np.int64)
+    e_loc = E // n_cols
+    for j in range(n_cols):
+        col_of[perm[j * e_loc:(j + 1) * e_loc]] = j
+
+    def spread(pl):
+        c = pl[ids]
+        return np.mean([len(set(row)) for row in c[:2000]])
+    # Measured trade-off (EXPERIMENTS.md §Perf iteration 7): with zipf-hot
+    # co-firing, balance REQUIRES splitting hot experts, so locality cannot
+    # beat layouts that pile hot experts together. We assert the documented
+    # bound: spread stays within ~20% of a random placement while balance is
+    # near its floor — the straggler objective wins, by design.
+    rng = np.random.default_rng(1)
+    rand_spreads = []
+    for _ in range(5):
+        rp = rng.permutation(E)
+        col_r = np.empty(E, np.int64)
+        for j in range(n_cols):
+            col_r[rp[j * e_loc:(j + 1) * e_loc]] = j
+        rand_spreads.append(spread(col_r))
+    assert spread(col_of) <= np.mean(rand_spreads) * 1.2
+
+
+def test_apply_placement_shapes():
+    import jax.numpy as jnp
+    from repro.core.expert_placement import apply_placement
+    tree = {"w_in": jnp.arange(8 * 2 * 3).reshape(8, 2, 3)}
+    perm = np.asarray([7, 6, 5, 4, 3, 2, 1, 0])
+    out = apply_placement(tree, perm)
+    np.testing.assert_array_equal(np.asarray(out["w_in"][0]),
+                                  np.asarray(tree["w_in"][7]))

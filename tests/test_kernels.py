@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q,f", [(3, 5), (14, 23), (64, 64), (130, 257)])
+def test_jaccard_sweep(q, f):
+    from repro.kernels.jaccard.ops import (jaccard_distance,
+                                           jaccard_distance_reference)
+    m = (RNG.uniform(size=(q, f)) < 0.3).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(jaccard_distance(m)),
+                               np.asarray(jaccard_distance_reference(m)),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,Hkv,S,T,d,dt,tol", [
+    (1, 2, 2, 64, 64, 16, "float32", 2e-5),
+    (2, 4, 2, 96, 96, 32, "float32", 2e-5),
+    (1, 2, 1, 33, 70, 16, "float32", 2e-5),
+    (1, 4, 4, 40, 40, 8, "float32", 2e-5),
+    (1, 2, 2, 64, 64, 16, "bfloat16", 3e-2),
+])
+def test_flash_attention_sweep(B, H, Hkv, S, T, d, dt, tol):
+    from repro.kernels.flash_attention.ops import (flash_attention,
+                                                   flash_attention_reference)
+    q = jnp.asarray(RNG.normal(size=(B, H, S, d)), dt)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, T, d)), dt)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, T, d)), dt)
+    out = np.asarray(flash_attention(q, k, v, block_q=32, block_k=32),
+                     np.float32)
+    ref = np.asarray(flash_attention_reference(q, k, v), np.float32)
+    np.testing.assert_allclose(out, ref, atol=tol)
+
+
+def test_flash_attention_non_causal():
+    from repro.kernels.flash_attention.ops import (flash_attention,
+                                                   flash_attention_reference)
+    q = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 48, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 48, 16)), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v, causal=False, block_q=16,
+                                     block_k=16))
+    ref = np.asarray(flash_attention_reference(q, k, v, causal=False))
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("E,D,N,dt", [
+    (100, 16, 50, "float32"), (1000, 64, 300, "float32"),
+    (64, 7, 10, "float32"), (256, 32, 100, "bfloat16"),
+])
+def test_segment_spmm_sweep(E, D, N, dt):
+    from repro.kernels.segment_spmm.ops import (segment_spmm,
+                                                segment_spmm_reference)
+    vals = jnp.asarray(RNG.normal(size=(E, D)), dt)
+    recv = jnp.asarray(RNG.integers(0, N, E).astype(np.int32))
+    mask = jnp.asarray(RNG.uniform(size=E) < 0.9)
+    out = np.asarray(segment_spmm(vals, recv, mask, N), np.float32)
+    ref = np.asarray(segment_spmm_reference(vals, recv, mask, N), np.float32)
+    tol = 1e-4 if dt == "float32" else 0.15
+    np.testing.assert_allclose(out, ref, atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("V,D,N", [(500, 10, 64), (128, 128, 16),
+                                   (1000, 17, 200)])
+def test_gather_rows_sweep(V, D, N):
+    from repro.kernels.embedding_bag.ops import (gather_rows,
+                                                 gather_rows_reference)
+    table = jnp.asarray(RNG.normal(size=(V, D)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(0, V, N).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(gather_rows(table, ids)),
+                                  np.asarray(gather_rows_reference(table, ids)))
+
+
+@pytest.mark.parametrize("V,D,B,bag", [(500, 10, 16, 4), (200, 32, 8, 7)])
+def test_bag_sum_sweep(V, D, B, bag):
+    from repro.kernels.embedding_bag.ops import bag_sum, bag_sum_reference
+    table = jnp.asarray(RNG.normal(size=(V, D)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(0, V, (B, bag)).astype(np.int32))
+    w = jnp.asarray(RNG.normal(size=(B, bag)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(bag_sum(table, ids, w)),
+                               np.asarray(bag_sum_reference(table, ids, w)),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,F,D,K", [(12, 20, 39, 10, 50),
+                                       (8, 39, 39, 10, 200),
+                                       (16, 7, 13, 8, 20)])
+def test_cin_sweep(B, H, F, D, K):
+    from repro.kernels.cin.ops import cin_layer, cin_layer_reference
+    xk = jnp.asarray(RNG.normal(size=(B, H, D)).astype(np.float32))
+    x0 = jnp.asarray(RNG.normal(size=(B, F, D)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(K, H, F)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(cin_layer(xk, x0, w)),
+                               np.asarray(cin_layer_reference(xk, x0, w)),
+                               atol=5e-4, rtol=1e-4)

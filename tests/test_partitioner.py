@@ -1,0 +1,93 @@
+"""Algorithm 2 invariants: totality, no replication, balance, objective."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partitioner import (centralized_partition, random_partition,
+                                    wawpart_partition, workload_join_stats)
+from repro.kg.generator import generate_lubm
+from repro.kg.query import Query, TriplePattern as T, c, v
+from repro.kg.triples import TripleStore
+from repro.kg.workloads import bsbm_queries, lubm_queries
+
+
+def test_totality_no_replication(lubm_small):
+    part = wawpart_partition(lubm_small, lubm_queries(), n_shards=3)
+    assign = part.assign_triples()
+    assert assign.shape[0] == len(lubm_small)
+    assert (assign >= 0).all() and (assign < 3).all()
+    # sizes consistent with assignment
+    for s in range(3):
+        assert int((assign == s).sum()) == int(part.shard_sizes[s])
+
+
+def test_balance_within_tolerance(lubm_small, bsbm_small):
+    for store, qs in [(lubm_small, lubm_queries()),
+                      (bsbm_small, bsbm_queries())]:
+        part = wawpart_partition(store, qs, n_shards=3, balance_tol=0.15)
+        dev = part.balance_report()["rel_dev"]
+        assert max(abs(x) for x in dev) <= 0.16, dev
+
+
+def test_beats_random_on_objective(lubm_small, bsbm_small):
+    """The paper's core claim at the placement level: fewer distributed
+    joins / less cross-shard traffic than the random-by-predicate baseline."""
+    for store, qs in [(lubm_small, lubm_queries()),
+                      (bsbm_small, bsbm_queries())]:
+        ww = workload_join_stats(qs, wawpart_partition(store, qs, n_shards=3))
+        rnd = workload_join_stats(qs, random_partition(store, qs, n_shards=3,
+                                                       seed=0))
+        assert ww["distributed"] < rnd["distributed"]
+        assert ww["traffic"] < rnd["traffic"]
+
+
+def test_centralized_is_all_local(lubm_small):
+    part = centralized_partition(lubm_small, lubm_queries())
+    stats = workload_join_stats(lubm_queries(), part)
+    assert stats["distributed"] == 0
+
+
+@st.composite
+def tiny_workload(draw):
+    n_preds = draw(st.integers(2, 6))
+    preds = [f"p{i}" for i in range(n_preds)]
+    objs = [f"o{i}" for i in range(4)]
+    subs = [f"s{i}" for i in range(8)]
+    triples = draw(st.lists(
+        st.tuples(st.sampled_from(subs), st.sampled_from(preds),
+                  st.sampled_from(objs + subs)),
+        min_size=10, max_size=60))
+    n_q = draw(st.integers(1, 5))
+    queries = []
+    for qi in range(n_q):
+        n_pat = draw(st.integers(1, 3))
+        pats = []
+        for pi in range(n_pat):
+            p = draw(st.sampled_from(preds))
+            o_const = draw(st.booleans())
+            pats.append(T(v("x"), c(p),
+                          c(draw(st.sampled_from(objs))) if o_const
+                          else v(f"y{pi}")))
+        queries.append(Query(f"q{qi}", tuple(pats)))
+    return TripleStore.from_string_triples(triples), queries
+
+
+@given(tiny_workload(), st.integers(2, 4))
+@settings(max_examples=25, deadline=None)
+def test_partition_totality_property(data, k):
+    store, queries = data
+    part = wawpart_partition(store, queries, n_shards=k)
+    assign = part.assign_triples()
+    assert (assign >= 0).all() and (assign < k).all()
+    assert int(part.shard_sizes.sum()) == len(store)
+
+
+def test_weights_sensitivity(lubm_small):
+    """w7 (distributed-join weight) dominates placement of shared features."""
+    qs = lubm_queries()
+    p1 = wawpart_partition(lubm_small, qs, n_shards=3,
+                           weights={"w7": 100.0})
+    p2 = wawpart_partition(lubm_small, qs, n_shards=3, weights={"w7": 0.0})
+    # both valid partitionings
+    for p in (p1, p2):
+        assert int(p.shard_sizes.sum()) == len(lubm_small)

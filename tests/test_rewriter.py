@@ -1,0 +1,36 @@
+"""Federated query rewriting (paper §3.2, Table 1)."""
+from repro.core.partitioner import centralized_partition, wawpart_partition
+from repro.core.rewriter import rewrite, to_sparql, workload_plans
+from repro.kg.workloads import lubm_queries
+
+
+def test_centralized_never_rewrites(lubm_small):
+    part = centralized_partition(lubm_small, lubm_queries())
+    for plan in workload_plans(lubm_queries(), part):
+        assert plan.is_local
+        assert "SERVICE" not in to_sparql(plan)
+
+
+def test_ppn_holds_most_patterns(lubm_small):
+    part = wawpart_partition(lubm_small, lubm_queries(), n_shards=3)
+    for q in lubm_queries():
+        plan = rewrite(q, part)
+        resident = [0] * part.n_shards
+        for h in plan.pattern_homes:
+            if len(h) == 1:
+                resident[next(iter(h))] += 1
+        assert resident[plan.ppn] == max(resident)
+
+
+def test_federated_sparql_structure(lubm_small):
+    part = wawpart_partition(lubm_small, lubm_queries(), n_shards=3)
+    plans = workload_plans(lubm_queries(), part)
+    # single-pattern queries (Q6, Q14) are never federated — paper Fig. 5
+    byname = {p.query.name: p for p in plans}
+    assert byname["LUBM-Q6"].n_distributed_joins == 0
+    assert byname["LUBM-Q14"].n_distributed_joins == 0
+    # any plan with remote patterns renders SERVICE blocks
+    for p in plans:
+        sparql = to_sparql(p)
+        assert ("SERVICE" in sparql) == (not p.is_local)
+        assert sparql.startswith("SELECT")

@@ -1,0 +1,109 @@
+"""Runtime substrate: optimizer, checkpointing, fault-tolerant trainer."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.tokens import token_batches
+from repro.models.transformer import LMConfig, init_params, loss_fn
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.compress import ef_compress, ef_decompress, ef_init
+from repro.runtime.trainer import Trainer, TrainTask
+
+CFG = LMConfig("t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+               d_head=16, d_ff=64, vocab_size=128, dtype="float32")
+
+
+def make_task(total=40, **kw):
+    return TrainTask(
+        name="tiny",
+        init_params=lambda k: init_params(CFG, k),
+        loss_fn=lambda p, b: loss_fn(p, CFG, jnp.asarray(b["tokens"]),
+                                     jnp.asarray(b["labels"])),
+        batches=token_batches(CFG.vocab_size, 8, 16, seed=1),
+        lr=1e-2, warmup=5, total_steps=total, **kw)
+
+
+# ---------------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+    for i in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(g, opt, params, lr=5e-2,
+                                      weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.int32(s), peak_lr=1.0, warmup=10,
+                                 total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert lrs[10] == pytest.approx(max(lrs), rel=1e-3)  # peak at warmup end
+    assert lrs[-1] < 0.2
+
+
+def test_ef_compression_roundtrip_bounded_error():
+    r = np.random.default_rng(0)
+    g = {"a": jnp.asarray(r.normal(size=(64,)).astype(np.float32))}
+    res = ef_init(g)
+    q, s, res2 = ef_compress(g, res)
+    back = ef_decompress(q, s)
+    err = float(jnp.abs(back["a"] - g["a"]).max())
+    scale = float(s["a"])
+    assert err <= scale  # quantization error bounded by one step
+    # residual carries exactly the round-off
+    np.testing.assert_allclose(np.asarray(res2["a"]),
+                               np.asarray(g["a"] - back["a"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_n=2, async_write=False)
+        tree = {"a": jnp.arange(5), "b": [jnp.ones((2, 2)), jnp.zeros(3)]}
+        for step in (10, 20, 30):
+            mgr.save(step, tree, blocking=True)
+        assert mgr.all_steps() == [20, 30]   # keep_n GC
+        got = mgr.restore(30, tree)
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(5))
+        np.testing.assert_array_equal(np.asarray(got["b"][0]), np.ones((2, 2)))
+
+
+def test_trainer_resume_bit_identical():
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(make_task(), ckpt_dir=d, ckpt_every=10)
+        with pytest.raises(RuntimeError):
+            tr.run(steps=40, fail_at_step=25)
+        out_resumed = Trainer(make_task(), ckpt_dir=d, ckpt_every=10).run(
+            steps=40)
+        out_clean = Trainer(make_task()).run(steps=40)
+        assert out_resumed["log"][0]["step"] == 20  # resumed from checkpoint
+        assert out_resumed["log"][-1]["loss"] == pytest.approx(
+            out_clean["log"][-1]["loss"], abs=1e-6)
+
+
+def test_trainer_loss_decreases():
+    out = Trainer(make_task()).run(steps=30)
+    losses = [r["loss"] for r in out["log"]]
+    assert losses[-1] < losses[0]
+
+
+def test_trainer_int8_ef_converges():
+    t = make_task()
+    t.grad_compression = "int8_ef"
+    out = Trainer(t).run(steps=30)
+    losses = [r["loss"] for r in out["log"]]
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+def test_prefetcher_depth_and_order():
+    from repro.data import Prefetcher
+    it = Prefetcher(iter(range(100)), depth=4)
+    got = list(it)
+    assert got == list(range(100))
