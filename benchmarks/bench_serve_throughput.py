@@ -1,0 +1,116 @@
+"""Workload-serving throughput: batched bucket engines vs per-query serving.
+
+Serves a round-robin LUBM request stream under each partitioning method:
+  * batch=1 baseline — the pre-batching architecture: one compiled engine per
+    query (plan-exact shapes), dispatched serially per request;
+  * batch=1/8/64 bucketed — the WorkloadServer slices the stream into batches
+    and runs each through the shape-bucket engines (engine/batch.py).
+
+Reports steady-state queries/sec (compilation excluded; compile counts are
+reported separately — the bucketed server must compile at most one engine per
+bucket, vs one per distinct query for the baseline).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _steady(fn, iters: int) -> float:
+    fn()                                   # warmup/compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
+        max_per_row: int = 64) -> dict:
+    # The bucketed server sizes its merge-join windows from the data (per
+    # step); max_per_row here is only the per-query baseline's window, which
+    # must cover the workload's true join fan-out: LUBM Q7/Q8 overflow (and
+    # silently truncate) below 64 at this scale. The overflow assertions
+    # keep the bench honest — throughput of a lossy config is not throughput.
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.federated import make_engine
+    from repro.engine.planner import make_plan
+    from repro.launch.serve import (WorkloadServer, build_dataset,
+                                    build_partition, request_stream)
+
+    store, queries = build_dataset("lubm", scale)
+    stream = request_stream(queries, n_requests)
+    out: dict = {"_meta": {"n_triples": len(store),
+                           "n_requests": n_requests}}
+    for method in ("wawpart", "random", "centralized"):
+        part = build_partition(method, store, queries, 3)
+        rows = {}
+
+        # -- baseline: per-query engines, one dispatch per request ---------
+        server = WorkloadServer(queries, part)
+        n_overflow = sum(bool(ovf) for _, _, ovf
+                         in server.serve(stream))
+        assert n_overflow == 0, \
+            f"{method}: {n_overflow} overflows — raise max_per_row"
+        engines = {}
+        ovf_flags = []
+        for q in queries:
+            plan = make_plan(q, part)
+            eng = make_engine(plan, join_impl="sorted",
+                              max_per_row=max_per_row)
+            fn = jax.jit(jax.vmap(eng, in_axes=(0, 0, None),
+                                  axis_name="shards"))
+            engines[q.name] = (fn, jnp.zeros((max(1, plan.n_params),),
+                                             jnp.int32))
+            ovf_flags.append(bool(
+                fn(jnp.asarray(server.kg.triples),
+                   jnp.asarray(server.kg.valid),
+                   engines[q.name][1])[2][plan.ppn]))
+        assert not any(ovf_flags), f"{method}: per-query overflow"
+        tr = jnp.asarray(server.kg.triples)
+        va = jnp.asarray(server.kg.valid)
+
+        def per_query():
+            for name, _ in stream:
+                fn, p = engines[name]
+                out_ = fn(tr, va, p)
+            jax.block_until_ready(out_)
+
+        dt = _steady(per_query, iters)
+        rows["batch1_perquery"] = {
+            "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
+            "compiles": len(engines)}
+
+        # -- bucketed server at batch sizes 1 / 8 / 64 ---------------------
+        for B in (1, 8, 64):
+            def bucketed(B=B):
+                for i in range(0, len(stream), B):
+                    server.serve(stream[i:i + B])
+
+            dt = _steady(bucketed, iters)
+            rows[f"batch{B}"] = {
+                "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
+                "compiles": server.n_compiles, "buckets": server.n_buckets}
+        assert server.n_compiles <= server.n_buckets, \
+            (server.n_compiles, server.n_buckets)
+        out[method] = rows
+    return out
+
+
+def main() -> None:
+    res = run()
+    meta = res.pop("_meta")
+    for method, rows in res.items():
+        for label, r in rows.items():
+            derived = f"qps={r['qps']:.0f};compiles={r['compiles']}"
+            print(f"serve/{method}/{label},{r['us_per_req']:.1f},{derived}")
+    ww = res["wawpart"]
+    ratio = ww["batch64"]["qps"] / ww["batch1_perquery"]["qps"]
+    print(f"serve/wawpart/batch64_vs_batch1,{ratio:.2f},"
+          f"x_speedup_over_per_query_serving")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   Fig.7/8 workload averages
   §4.1   shard balance
   §3.2   distributed-join counts + traffic (the objective)
+  §Serve batched workload-serving throughput (beyond-paper)
   §Roofline (if results/dryrun.jsonl exists)
 """
 from __future__ import annotations
@@ -16,13 +17,14 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_averages, bench_balance, bench_bsbm,
-                            bench_joins, bench_lubm)
+                            bench_joins, bench_lubm, bench_serve_throughput)
     print("name,us_per_call,derived")
     bench_joins.main()
     bench_balance.main()
     bench_lubm.main()
     bench_bsbm.main()
     bench_averages.main()
+    bench_serve_throughput.main()
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline
         roofline.main()

@@ -7,7 +7,11 @@ to collective-free programs. The same engine function runs under
 `jax.vmap(axis_name="shards")` on one CPU device (tests, benchmarks) and under
 `shard_map` on a real mesh (dry-run, production).
 """
-from repro.engine.planner import PhysicalPlan, make_plan
+from repro.engine.planner import PhysicalPlan, make_plan, pad_plan
 from repro.engine.oracle import evaluate_bgp
+from repro.engine.batch import (BucketSignature, EngineCache, PlanBucket,
+                                bucket_plans, make_batched_engine, run_batched)
 
-__all__ = ["PhysicalPlan", "make_plan", "evaluate_bgp"]
+__all__ = ["PhysicalPlan", "make_plan", "pad_plan", "evaluate_bgp",
+           "BucketSignature", "EngineCache", "PlanBucket", "bucket_plans",
+           "make_batched_engine", "run_batched"]

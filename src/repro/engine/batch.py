@@ -1,0 +1,593 @@
+"""Batched multi-query serving: plan bucketing + one compiled engine per bucket.
+
+The per-query engine (`engine/federated.py`) bakes every plan's structure —
+join columns, constants, owner sets — into the traced program, so serving a
+workload costs one XLA compile + dispatch per query. This module turns the
+plan structure into *data*: plans are padded to shape buckets (same step
+count, per-step scan caps, table cap) and their steps are encoded as small
+integer tensors, so one compiled engine executes every plan in a bucket and
+`jax.vmap` runs a whole batch of (plan, params) requests — an entire workload,
+including many user-parameterized instances of each template query — in a
+handful of XLA programs.
+
+Per-request runtime data (`PlanData`, one row per plan step):
+  consts (L,3)  term id per triple position, -1 wildcard / -2 never-match
+  pidx   (L,3)  params-vector index per position, -1 = use the constant
+  eq     (L,3)  intra-pattern equality gates for pairs (0,1),(0,2),(1,2)
+  kind   (L,3)  0 = unused position, 1 = shared (join) var, 2 = new var
+  col    (L,3)  binding-table column of the position's variable
+  owner  (L,S)  shards owning the pattern's feature (mask before all_gather)
+  noop   (L,)   padding step: the join is computed then discarded (identity)
+
+What stays static lives in the bucket signature and is the compile-cache key:
+shard count, step count, table width/cap, per-step scan caps, plus per-step
+structure bits that let the trace drop work no member plan needs — `gather`
+(any member needs the cross-shard all_gather), `sorted` (every member joins
+on a shared variable, so the sort-merge join applies; unlike the per-query
+engine it also covers semijoin steps, reporting fan-out beyond max_per_row
+through the overflow flag), `eq` / `param` / `noop` (any member uses
+intra-pattern equality / runtime params / padding at this step), and
+`new_mode` ("all" / "none" / "mixed": whether member steps bind new
+variables, which selects the expansion, semijoin, or both join outcomes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.federated import AXIS, ShardedKG, compact
+from repro.engine.planner import PhysicalPlan, pad_plan
+
+_EQ_PAIRS = ((0, 1), (0, 2), (1, 2))
+_INT_MAX = np.int32(2**31 - 1)
+
+
+class PlanData(NamedTuple):
+    """Per-plan step structure as arrays (leading batch axis once stacked)."""
+    consts: jax.Array   # (..., L, 3) int32
+    pidx: jax.Array     # (..., L, 3) int32
+    eq: jax.Array       # (..., L, 3) bool
+    kind: jax.Array     # (..., L, 3) int32
+    col: jax.Array      # (..., L, 3) int32
+    owner: jax.Array    # (..., L, S) bool
+    noop: jax.Array     # (..., L) bool
+
+
+@dataclass(frozen=True)
+class BucketSignature:
+    """Everything the compiled bucket engine specializes on."""
+    n_shards: int
+    n_steps: int
+    n_vars: int                      # binding-table width (>= 1)
+    table_cap: int
+    scan_caps: tuple[int, ...]
+    fanout_caps: tuple[int, ...]     # merge-join window width per step
+    verify_masks: tuple[tuple[bool, bool, bool], ...]  # positions any member
+                                     # verifies as a 2nd+ shared column
+    gather_bits: tuple[bool, ...]
+    sorted_bits: tuple[bool, ...]
+    eq_bits: tuple[bool, ...]
+    param_bits: tuple[bool, ...]
+    noop_bits: tuple[bool, ...]
+    new_modes: tuple[str, ...]       # "all" | "none" | "mixed"
+
+
+@dataclass
+class PlanBucket:
+    signature: BucketSignature
+    plans: list[PhysicalPlan]        # padded to the signature's shape
+    n_params: int                    # params-vector width (>= 1)
+    pdata: list[PlanData] = field(default_factory=list)  # per-plan, numpy
+
+
+def _plan_data(plan: PhysicalPlan, sig: BucketSignature) -> PlanData:
+    L, S = sig.n_steps, sig.n_shards
+    consts = np.full((L, 3), -2, np.int32)
+    pidx = np.full((L, 3), -1, np.int32)
+    eq = np.zeros((L, 3), bool)
+    kind = np.zeros((L, 3), np.int32)
+    col = np.zeros((L, 3), np.int32)
+    owner = np.zeros((L, S), bool)
+    noop = np.zeros((L,), bool)
+    for i, step in enumerate(plan.steps):
+        if step.is_noop:
+            noop[i] = True
+            continue
+        consts[i] = step.consts
+        for pos, p_i in step.param_slots:
+            pidx[i, pos] = p_i
+        for k, pair in enumerate(_EQ_PAIRS):
+            if pair in step.eqs:
+                eq[i, k] = True
+        for pos, c_ in step.shared:
+            kind[i, pos], col[i, pos] = 1, c_
+        for pos, c_ in step.new:
+            kind[i, pos], col[i, pos] = 2, c_
+        for s in step.owners:
+            owner[i, s] = True
+    return PlanData(consts, pidx, eq, kind, col, owner, noop)
+
+
+def _pad_level(n: int, levels: tuple[int, ...]) -> int:
+    for lvl in levels:
+        if n <= lvl:
+            return lvl
+    return n  # longer than every level: its own bucket size
+
+
+DEFAULT_STEP_LEVELS = (1, 2, 3, 4, 6, 8, 12, 16)
+
+
+def bucket_plans(plans: list[PhysicalPlan], *,
+                 step_levels: tuple[int, ...] = DEFAULT_STEP_LEVELS,
+                 ) -> list[PlanBucket]:
+    """Group plans into shape buckets and pad members to the bucket shape.
+
+    Plans are grouped by (n_shards, step count rounded up to a level); within
+    a group, per-step scan caps, the table cap, and the table width are lifted
+    to the group maximum, which *is* the bucket signature — identical
+    signatures from different workloads share one compiled engine.
+    """
+    groups: dict[tuple[int, int], list[PhysicalPlan]] = {}
+    for p in plans:
+        key = (p.n_shards, _pad_level(len(p.steps), step_levels))
+        groups.setdefault(key, []).append(p)
+
+    buckets: list[PlanBucket] = []
+    for (S, L), members in sorted(groups.items()):
+        scan_caps, fanout_caps, gather_bits, sorted_bits = [], [], [], []
+        eq_bits, param_bits, noop_bits, new_modes = [], [], [], []
+        verify_masks = []
+        for i in range(L):
+            steps = [p.steps[i] for p in members if i < len(p.steps)]
+            real = [s for s in steps if not s.is_noop]  # members may arrive
+            # pre-padded (pad_plan); their no-op steps must not shape the
+            # structure bits, only the capacity maxima
+            scan_caps.append(max([s.scan_cap for s in steps] or [8]))
+            fanout_caps.append(max([s.block_fanout_cap for s in real] or [8]))
+            vm = [False, False, False]
+            for s in real:
+                for pos, _ in s.shared[1:]:
+                    vm[pos] = True
+            verify_masks.append(tuple(vm))
+            gather_bits.append(any(s.gather for s in real))
+            sorted_bits.append(bool(real) and all(s.shared for s in real))
+            eq_bits.append(any(s.eqs for s in real))
+            param_bits.append(any(s.param_slots for s in real))
+            noop_bits.append(len(real) < len(members))
+            with_new = sum(1 for s in real if s.new)
+            new_modes.append("all" if real and with_new == len(real) else
+                             "none" if with_new == 0 else "mixed")
+        n_vars = max(1, max(p.n_vars for p in members))
+        table_cap = max(p.table_cap for p in members)
+        sig = BucketSignature(
+            n_shards=S, n_steps=L, n_vars=n_vars, table_cap=table_cap,
+            scan_caps=tuple(scan_caps), fanout_caps=tuple(fanout_caps),
+            verify_masks=tuple(verify_masks), gather_bits=tuple(gather_bits),
+            sorted_bits=tuple(sorted_bits), eq_bits=tuple(eq_bits),
+            param_bits=tuple(param_bits), noop_bits=tuple(noop_bits),
+            new_modes=tuple(new_modes))
+        padded = [pad_plan(p, L, scan_caps=scan_caps, table_cap=table_cap)
+                  for p in members]
+        n_params = max(1, max(p.n_params for p in members))
+        bucket = PlanBucket(signature=sig, plans=padded, n_params=n_params)
+        bucket.pdata = [_plan_data(p, sig) for p in padded]
+        buckets.append(bucket)
+    return buckets
+
+
+# ---------------------------------------------------------------------------
+# data-driven engine primitives
+# ---------------------------------------------------------------------------
+
+def _select_cap(mask, cap: int):
+    """Stable compaction: (idx, sel, total) where idx[j] is the position of
+    the j-th set entry of mask (clamped past `total`), sel = arange < total.
+
+    Equivalent to idx = argsort(~mask)[:cap]; sel = mask[idx] — but built
+    from a cumsum plus a vectorized binary search. XLA:CPU runs sort, top_k,
+    and vmapped scatter at ~100-200ns/element on this path, an order of
+    magnitude slower than elementwise + gather ops; this compaction runs once
+    per plan step per (batch, shard) instance and dominated the engine's
+    profile in every earlier formulation.
+    """
+    n = mask.shape[0]
+    k = min(cap, n)
+    cum = jnp.cumsum(mask.astype(jnp.int32))
+    total = cum[-1]
+    idx = jnp.searchsorted(cum, jnp.arange(1, k + 1, dtype=jnp.int32),
+                           side="left")
+    idx = jnp.clip(idx, 0, n - 1)
+    sel = jnp.arange(k) < total
+    return idx, sel, total
+
+
+def _scan_hit(triples, valid, spo, eq, use_eq: bool):
+    """Pattern-match mask over a shard, constants/equality gates as data."""
+    s, p, o = spo[0], spo[1], spo[2]
+    hit = valid
+    hit = hit & jnp.where(s == -1, True, triples[:, 0] == s)
+    hit = hit & jnp.where(p == -1, True, triples[:, 1] == p)
+    hit = hit & jnp.where(o == -1, True, triples[:, 2] == o)
+    hit = hit & (s != -2) & (p != -2) & (o != -2)
+    if use_eq:
+        for k, (a, b) in enumerate(_EQ_PAIRS):
+            hit = hit & (~eq[k] | (triples[:, a] == triples[:, b]))
+    return hit
+
+
+def _materialize(triples, hit, cap: int):
+    """Compact matching rows to (min(cap, N), 3) in shard order — when the
+    static cap covers the whole shard the selection (and the overflow
+    reduction) is dropped from the trace entirely."""
+    if cap >= triples.shape[0]:
+        return triples, hit, jnp.zeros((), bool)
+    idx, mm, total = _select_cap(hit, cap)
+    return triples[idx], mm, total > cap
+
+
+def shard_perms(kg: ShardedKG) -> np.ndarray:
+    """(S, 3, N) int32: per shard, the stable sort permutation of its triple
+    block by each triple position. The batched sort-merge join materializes
+    matches through the join-key position's permutation, so its keys are
+    sorted *by construction* — XLA:CPU runs sort at ~200ns/element, so a
+    per-step runtime sort would dominate the whole engine."""
+    S, N = kg.n_shards, kg.cap
+    perms = np.empty((S, 3, N), np.int32)
+    for s in range(S):
+        for pos in range(3):
+            perms[s, pos] = np.argsort(kg.triples[s, :, pos], kind="stable")
+    return perms
+
+
+def _materialize_view(triples, perms, hit, pos0, cap: int):
+    """Compact matching rows to (min(cap, N), 3), ordered by the pos0 column
+    (via the precomputed per-position sort permutations), valid rows first —
+    so the pos0 keys of the valid prefix are sorted."""
+    perm = perms[pos0]                       # (N,) — runtime-selected view
+    idx, mm, total = _select_cap(hit[perm], min(cap, perm.shape[0]))
+    m = triples[perm[idx]]
+    ovf = (total > cap) if cap < perm.shape[0] else jnp.zeros((), bool)
+    return m, mm, ovf
+
+
+def _scatter_new(out, values, kind, col, n_vars: int):
+    """Write matched values into their (runtime-chosen) new-var columns."""
+    colids = jnp.arange(n_vars)[None, :]
+    for pos in range(3):
+        hot = (kind[pos] == 2) & (colids == jnp.clip(col[pos], 0, n_vars - 1))
+        out = jnp.where(hot, values[pos][:, None], out)
+    return out
+
+
+def _mix(new_mode: str, kind, expansion, semijoin):
+    """Select the (table, mask, overflow) outcome per the bucket's new_mode."""
+    if new_mode == "all":
+        return expansion()
+    if new_mode == "none":
+        return semijoin()
+    te, me, oe = expansion()
+    ts, ms, os_ = semijoin()
+    has_new = jnp.any(kind == 2)
+    return (jnp.where(has_new, te, ts), jnp.where(has_new, me, ms),
+            jnp.where(has_new, oe, os_))
+
+
+def _seed_join(table, matches, mmask, kind, col, new_mode: str):
+    """Step-0 join: the table holds only the seed row, so the 'join' is a
+    compaction of the matches straight into the table columns — avoids the
+    R x C compat matrix exactly where C is largest (unselective first scans).
+    Bit-equivalent to the general joins on a seed table."""
+    R, V = table.shape
+
+    def expansion():
+        if matches.shape[0] <= R:        # matches fit: no selection needed
+            m, mm = matches, mmask
+            ovf = jnp.zeros((), bool)
+        else:
+            idx, mm, total = _select_cap(mmask, R)
+            m = matches[idx]
+            ovf = total > R
+        if m.shape[0] < R:
+            m = jnp.pad(m, ((0, R - m.shape[0]), (0, 0)), constant_values=-1)
+            mm = jnp.pad(mm, (0, R - mm.shape[0]))
+        out = _scatter_new(jnp.full((R, V), -1, jnp.int32),
+                           [m[:, pos] for pos in range(3)], kind, col, V)
+        return out, mm, ovf
+
+    def semijoin():                      # fully-constant first pattern
+        return (table, jnp.zeros((R,), bool).at[0].set(jnp.any(mmask)),
+                jnp.zeros((), bool))
+
+    return _mix(new_mode, kind, expansion, semijoin)
+
+
+def _join_data(table, tmask, matches, mmask, kind, col, new_mode: str):
+    """Expand-and-filter join with the join structure as runtime data."""
+    R, V = table.shape
+    C = matches.shape[0]
+    compat = tmask[:, None] & mmask[None, :]
+    for pos in range(3):
+        cc = jnp.clip(col[pos], 0, V - 1)
+        compat = compat & jnp.where(
+            kind[pos] == 1,
+            jnp.take(table, cc, axis=1)[:, None] == matches[None, :, pos],
+            True)
+
+    def expansion():
+        flat = compat.reshape(-1)
+        order, omask, total = _select_cap(flat, R)
+        r_idx, c_idx = order // C, order % C
+        out = _scatter_new(table[r_idx],
+                           [matches[c_idx, pos] for pos in range(3)],
+                           kind, col, V)
+        return out, omask, total > R
+
+    def semijoin():
+        return table, tmask & compat.any(axis=1), jnp.zeros((), bool)
+
+    return _mix(new_mode, kind, expansion, semijoin)
+
+
+def _join_merge(table, tmask, m_blocks, mm_blocks, pos0, kind, col,
+                new_mode: str, *, max_per_row: int,
+                verify_mask: tuple[bool, bool, bool]):
+    """Merge join against per-shard match blocks whose pos0 keys are sorted
+    (valid prefix) by construction — a binary search per block locates each
+    table row's candidate range, up to max_per_row candidates *per block* are
+    expanded, and the remaining shared columns verify during expansion. No
+    sort appears anywhere. Only traced for steps where every bucket member
+    joins on a shared var; fan-out beyond max_per_row sets the overflow flag.
+
+    m_blocks: (S_b, C, 3), mm_blocks: (S_b, C) — one block per gathered
+    shard, or a single block for PPN-local steps. verify_mask flags the
+    positions some member verifies as a 2nd+ shared column: only those
+    force the (R, S_b*K)-sized candidate gathers before selection — all
+    other candidate values are gathered after, R at a time (XLA:CPU runs
+    large batched gathers on a slow path).
+    """
+    R, V = table.shape
+    Sb, C = mm_blocks.shape
+    K = min(max_per_row, C)
+    is_sh = kind == 1
+    col0 = jnp.clip(col[jnp.argmax(is_sh)], 0, V - 1)
+
+    keys = jnp.where(mm_blocks, jnp.take(m_blocks, pos0, axis=2), _INT_MAX)
+    rkey = jnp.take(table, col0, axis=1)
+    lo = jax.vmap(lambda k: jnp.searchsorted(k, rkey, side="left"))(keys)
+    hi = jax.vmap(lambda k: jnp.searchsorted(k, rkey, side="right"))(keys)
+    counts = jnp.where(tmask[None, :], hi - lo, 0)       # (S_b, R)
+    overflow_fanout = jnp.max(counts) > K
+
+    offs = jnp.arange(K)[None, None, :]
+    pair_ok = ((offs < counts[:, :, None]) & tmask[None, :, None]) \
+        .transpose(1, 0, 2).reshape(R, Sb * K)
+    m_flat = m_blocks.reshape(Sb * C, 3)
+
+    def cand_idx(order):
+        """Flat indices into m_flat for pair slots `order` (any shape)."""
+        blk = (order % (Sb * K)) // K
+        within = order % K
+        row = order // (Sb * K)
+        src = jnp.clip(lo[blk, row] + within, 0, C - 1)
+        return blk * C + src
+
+    if any(verify_mask):
+        idx_all = cand_idx(jnp.arange(R * Sb * K)).reshape(R, Sb * K)
+        for pos in range(3):
+            if not verify_mask[pos]:
+                continue
+            chk = is_sh[pos] & (pos != pos0)
+            cc = jnp.clip(col[pos], 0, V - 1)
+            pair_ok = pair_ok & jnp.where(
+                chk,
+                m_flat[idx_all, pos] == jnp.take(table, cc, axis=1)[:, None],
+                True)
+
+    def expansion():
+        # select surviving (row, candidate) pairs first, THEN gather their
+        # match values — R gathers instead of R*S_b*K
+        flat = pair_ok.reshape(-1)
+        order, omask, total = _select_cap(flat, R)
+        vals = m_flat[cand_idx(order)]               # (R, 3)
+        out = _scatter_new(table[order // (Sb * K)],
+                           [vals[:, pos] for pos in range(3)], kind, col, V)
+        return out, omask, total > R
+
+    def semijoin():
+        return table, tmask & pair_ok.any(axis=1), jnp.zeros((), bool)
+
+    t2, m2, ovf = _mix(new_mode, kind, expansion, semijoin)
+    return t2, m2, ovf | overflow_fanout
+
+
+# ---------------------------------------------------------------------------
+# bucket engine
+# ---------------------------------------------------------------------------
+
+def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
+                        max_per_row: int | None = None,
+                        gather_cap: int | None = None,
+                        axis_name: str = AXIS):
+    """Build engine(triples, valid, perms, pdata, params) ->
+    (table, mask, overflow) for one bucket signature. The engine is
+    plan-agnostic: every member plan of any bucket with this signature runs
+    through the same traced program. `perms` comes from `shard_perms(kg)`.
+
+    gather_cap (post-all_gather compaction) applies to the expand/base join
+    path; the merge join keeps gathered matches in per-shard blocks, whose
+    size is already bounded by the step's scan cap.
+
+    max_per_row: ceiling on the merge-join window width. The per-step width
+    is the signature's data-sized fanout cap — one unselective join (LUBM Q8
+    dept->students) must not widen every other step's window; pass an int
+    only to clamp it further (risking overflow, which the flag reports).
+    """
+    S, L, V, R = sig.n_shards, sig.n_steps, sig.n_vars, sig.table_cap
+
+    def engine(triples: jax.Array, valid: jax.Array, perms: jax.Array,
+               pd: PlanData, params: jax.Array):
+        my = jax.lax.axis_index(axis_name) if S > 1 else jnp.int32(0)
+        table = jnp.full((R, V), -1, jnp.int32)
+        tmask = jnp.zeros((R,), bool).at[0].set(True)
+        overflow = jnp.zeros((), bool)
+
+        for i in range(L):
+            cap = sig.scan_caps[i]
+            spo = pd.consts[i]
+            if sig.param_bits[i]:
+                spo = jnp.where(pd.pidx[i] >= 0,
+                                params[jnp.clip(pd.pidx[i], 0)], spo)
+            hit = _scan_hit(triples, valid, spo, pd.eq[i], sig.eq_bits[i])
+            if sig.gather_bits[i] and S > 1:
+                hit = hit & pd.owner[i, my]
+            merge = (i > 0 and join_impl == "sorted" and sig.sorted_bits[i])
+
+            if merge:   # matches per block, pos0-key-sorted by construction
+                pos0 = jnp.argmax(pd.kind[i] == 1)
+                m, mm, step_ovf = _materialize_view(triples, perms, hit,
+                                                    pos0, cap)
+                if sig.gather_bits[i] and S > 1:
+                    m = jax.lax.all_gather(m, axis_name)       # (S, C, 3)
+                    mm = jax.lax.all_gather(mm, axis_name)     # (S, C)
+                else:
+                    m, mm = m[None], mm[None]
+                K = sig.fanout_caps[i] if max_per_row is None \
+                    else min(max_per_row, sig.fanout_caps[i])
+                t2, m2, ovf_j = _join_merge(
+                    table, tmask, m, mm, pos0, pd.kind[i], pd.col[i],
+                    sig.new_modes[i], max_per_row=K,
+                    verify_mask=sig.verify_masks[i])
+            else:
+                m, mm, step_ovf = _materialize(triples, hit, cap)
+                if sig.gather_bits[i] and S > 1:
+                    C = m.shape[0]
+                    m = jax.lax.all_gather(m, axis_name).reshape(S * C, 3)
+                    mm = jax.lax.all_gather(mm, axis_name).reshape(S * C)
+                    if gather_cap is not None and gather_cap < S * C:
+                        m, mm, ovf_g = compact(m, mm, gather_cap)
+                        step_ovf = step_ovf | ovf_g
+                if i == 0:
+                    t2, m2, ovf_j = _seed_join(table, m, mm, pd.kind[i],
+                                               pd.col[i], sig.new_modes[i])
+                else:
+                    t2, m2, ovf_j = _join_data(table, tmask, m, mm,
+                                               pd.kind[i], pd.col[i],
+                                               sig.new_modes[i])
+            if sig.noop_bits[i]:         # some member pads here: gate
+                noop = pd.noop[i]
+                table = jnp.where(noop, table, t2)
+                tmask = jnp.where(noop, tmask, m2)
+                overflow = overflow | (~noop & (step_ovf | ovf_j))
+            else:
+                table, tmask = t2, m2
+                overflow = overflow | step_ovf | ovf_j
+        return table, tmask, overflow
+
+    return engine
+
+
+class EngineCache:
+    """Compile cache: one jitted bucket engine per (signature, options).
+
+    `misses` counts engine builds — the bench's "compile count ≤ number of
+    buckets" check reads it (jax.jit re-specializes internally per batch
+    shape, which the steady-state serving loop never changes).
+    """
+
+    def __init__(self) -> None:
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, sig: BucketSignature, *, join_impl: str = "expand",
+            max_per_row: int | None = None, gather_cap: int | None = None,
+            axis_name: str = AXIS):
+        key = (sig, join_impl, max_per_row, gather_cap, axis_name)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            engine = make_batched_engine(
+                sig, join_impl=join_impl, max_per_row=max_per_row,
+                gather_cap=gather_cap, axis_name=axis_name)
+            fn = jax.jit(jax.vmap(
+                jax.vmap(engine, in_axes=(0, 0, 0, None, None),
+                         axis_name=axis_name),           # shard axis
+                in_axes=(None, None, None, 0, 0)))       # batch axis
+            self._fns[key] = fn
+        else:
+            self.hits += 1
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# batch assembly + execution
+# ---------------------------------------------------------------------------
+
+def assemble_batch(bucket: PlanBucket,
+                   requests: list[tuple[int, np.ndarray | None]],
+                   ) -> tuple[PlanData, jnp.ndarray]:
+    """Stack (plan_idx, params) requests into (PlanData[B,...], params[B,P])."""
+    if not requests:
+        raise ValueError("empty request batch")
+    P = bucket.n_params
+    stacked = PlanData(*(jnp.asarray(np.stack(
+        [getattr(bucket.pdata[idx], f) for idx, _ in requests]))
+        for f in PlanData._fields))
+    pvecs = np.zeros((len(requests), P), np.int32)
+    for r, (_, pv) in enumerate(requests):
+        if pv is not None:
+            pv = np.asarray(pv, np.int32).reshape(-1)
+            pvecs[r, :pv.shape[0]] = pv
+    return stacked, jnp.asarray(pvecs)
+
+
+def extract_batch(bucket: PlanBucket,
+                  requests: list[tuple[int, np.ndarray | None]],
+                  table, tmask, overflow):
+    """Per-request (solutions, count, overflow), PPN shard, sorted + deduped
+    (mirrors federated._extract so results compare bit-identically)."""
+    table = np.asarray(table)
+    tmask = np.asarray(tmask)
+    overflow = np.asarray(overflow)
+    out = []
+    for r, (idx, _) in enumerate(requests):
+        plan = bucket.plans[idx]
+        t = table[r, plan.ppn]
+        m = tmask[r, plan.ppn]
+        ov = bool(overflow[r, plan.ppn])
+        rows = t[m][:, :plan.n_vars]
+        rows = np.unique(rows, axis=0) if rows.shape[0] \
+            else rows.reshape(0, plan.n_vars)
+        out.append((rows.astype(np.int32), int(rows.shape[0]), ov))
+    return out
+
+
+def run_batched(bucket: PlanBucket, kg: ShardedKG,
+                requests: list[tuple[int, np.ndarray | None]] | None = None,
+                *, join_impl: str = "expand", max_per_row: int | None = None,
+                gather_cap: int | None = None, cache: EngineCache | None = None,
+                perms: np.ndarray | None = None):
+    """Execute a batch of requests against one bucket (vmap simulation).
+
+    requests defaults to one zero-params request per member plan. perms
+    (from shard_perms(kg)) can be passed in to amortize the per-shard sort
+    permutations across calls. Returns the list of per-request
+    (solutions, count, overflow).
+    """
+    if requests is None:
+        requests = [(i, None) for i in range(len(bucket.plans))]
+    cache = cache or EngineCache()
+    fn = cache.get(bucket.signature, join_impl=join_impl,
+                   max_per_row=max_per_row, gather_cap=gather_cap)
+    pd, params = assemble_batch(bucket, requests)
+    if perms is None:
+        perms = shard_perms(kg)
+    table, tmask, overflow = fn(jnp.asarray(kg.triples),
+                                jnp.asarray(kg.valid),
+                                jnp.asarray(perms), pd, params)
+    return extract_batch(bucket, requests, table, tmask, overflow)

@@ -77,6 +77,8 @@ def make_engine(plan: PhysicalPlan, *, join_impl: str = "expand",
         overflow = jnp.zeros((), bool)
 
         for step in plan.steps:
+            if step.is_noop:   # bucket padding: identity on the table
+                continue
             s_, p_, o_ = (jnp.asarray(v, jnp.int32) for v in step.consts)
             for pos, pidx in step.param_slots:
                 val = params[pidx]
@@ -121,10 +123,11 @@ def make_engine(plan: PhysicalPlan, *, join_impl: str = "expand",
 def run_vmapped(plan: PhysicalPlan, kg: ShardedKG,
                 params: np.ndarray | None = None, *,
                 join_impl: str = "expand", max_per_row: int = 64,
-                jit: bool = True):
+                gather_cap: int | None = None, jit: bool = True):
     """Single-device simulation: vmap over the shard axis. Returns the PPN
     device's (solutions, count, overflow)."""
-    engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row)
+    engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
+                         gather_cap=gather_cap)
     p = jnp.zeros((max(1, plan.n_params),), jnp.int32) if params is None \
         else jnp.asarray(params, jnp.int32)
     fn = jax.vmap(engine, in_axes=(0, 0, None), axis_name=AXIS)
@@ -137,14 +140,14 @@ def run_vmapped(plan: PhysicalPlan, kg: ShardedKG,
 def run_sharded(plan: PhysicalPlan, kg: ShardedKG, mesh,
                 params: np.ndarray | None = None, *,
                 join_impl: str = "expand", max_per_row: int = 64,
-                axis: str | None = None):
+                gather_cap: int | None = None, axis: str | None = None):
     """shard_map execution on a real mesh axis (dry-run / production)."""
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     axis = axis or AXIS
     engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
-                         axis_name=axis)
+                         gather_cap=gather_cap, axis_name=axis)
 
     def kernel(triples, valid, params):
         t, m, o = engine(triples[0], valid[0], params)

@@ -25,7 +25,7 @@ def _pow2ceil(x: int) -> int:
 
 @dataclass(frozen=True)
 class PlanStep:
-    pattern_idx: int
+    pattern_idx: int                       # -1 marks a padding no-op step
     consts: tuple[int, int, int]           # term id, -1 = variable, -2 = no-match
     slots: tuple[tuple[int, int], ...]     # (triple_pos, var_col), deduped
     eqs: tuple[tuple[int, int], ...]       # intra-pattern equal positions
@@ -35,6 +35,26 @@ class PlanStep:
     gather: bool
     scan_cap: int
     param_slots: tuple[tuple[int, int], ...] = ()  # (triple_pos, param_index)
+    block_fanout_cap: int = 64   # max matches per join-key value per shard,
+                                 # sized from data like scan_cap (batched
+                                 # engine join-window width; overflow flag
+                                 # still guards runtime drift, e.g. params)
+
+    @property
+    def is_noop(self) -> bool:
+        return self.pattern_idx < 0
+
+
+def noop_step(scan_cap: int) -> PlanStep:
+    """Padding step: never matches, binds nothing, leaves the table untouched.
+
+    Distinct from a real never-match step (a constant absent from the
+    dictionary also yields -2 consts but legitimately annihilates the table);
+    the pattern_idx=-1 sentinel is what marks padding.
+    """
+    return PlanStep(pattern_idx=-1, consts=(-2, -2, -2), slots=(), eqs=(),
+                    shared=(), new=(), owners=(), gather=False,
+                    scan_cap=int(scan_cap), block_fanout_cap=8)
 
 
 @dataclass
@@ -155,6 +175,7 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
         scan_caps, table_cap = [list(capacities[0]), capacities[1]]
 
     params = params or {}
+    assign = None          # shard-per-triple, computed on first shared step
     steps: list[PlanStep] = []
     bound: set[int] = set()
     for step_i, pi in enumerate(ord_idx):
@@ -182,10 +203,32 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
         gather = not (set(owners) <= {ppn}) if owners else True
         psl = tuple((pos, pidx) for (qpi, pos), pidx in sorted(params.items())
                     if qpi == pi)
+        # per-shard join fan-out on the first shared key, from the data —
+        # sizes the batched engine's merge-join window per step
+        fanout = 1
+        if shared:
+            if assign is None:
+                assign = part.assign_triples()
+            tr = store.triples
+            hit = np.ones(len(tr), dtype=bool)
+            for pos, cid in enumerate(consts):
+                if cid == -2:
+                    hit[:] = False
+                elif cid >= 0:
+                    hit &= tr[:, pos] == cid
+            for a, b in eqs:
+                hit &= tr[:, a] == tr[:, b]
+            rows = np.nonzero(hit)[0]
+            if rows.size:
+                key = (assign[rows].astype(np.int64) * (len(d) + 2)
+                       + tr[rows, shared[0][0]])
+                fanout = int(np.unique(key, return_counts=True)[1].max())
+        bcap = min(max_cap, _pow2ceil(int(fanout * cap_margin) + 4))
         steps.append(PlanStep(
             pattern_idx=pi, consts=tuple(consts), slots=tuple(slots),
             eqs=tuple(eqs), shared=shared, new=new, owners=owners,
-            gather=gather, scan_cap=int(scan_caps[step_i]), param_slots=psl))
+            gather=gather, scan_cap=int(scan_caps[step_i]), param_slots=psl,
+            block_fanout_cap=bcap))
         bound |= {col for _, col in slots}
 
     n_params = (max(params.values()) + 1) if params else 0
@@ -194,3 +237,37 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
         var_names=tuple(qvars), steps=steps, table_cap=int(table_cap),
         n_params=n_params,
         meta={"order": ord_idx, "homes": [sorted(h) for h in homes]})
+
+
+def pad_plan(plan: PhysicalPlan, n_steps: int,
+             scan_caps: list[int] | None = None,
+             table_cap: int | None = None) -> PhysicalPlan:
+    """Pad a plan to a bucket shape: append no-op steps up to n_steps, lift
+    per-step scan caps and the table cap to the bucket's (never shrink —
+    capacities are correctness bounds, a smaller cap could drop solutions).
+    """
+    if n_steps < len(plan.steps):
+        raise ValueError(f"cannot pad {len(plan.steps)}-step plan to {n_steps}")
+    caps = list(scan_caps) if scan_caps is not None else \
+        [s.scan_cap for s in plan.steps] + [8] * (n_steps - len(plan.steps))
+    if len(caps) != n_steps:
+        raise ValueError(f"scan_caps has {len(caps)} entries, want {n_steps}")
+    steps: list[PlanStep] = []
+    for i in range(n_steps):
+        if i < len(plan.steps):
+            s = plan.steps[i]
+            steps.append(PlanStep(
+                pattern_idx=s.pattern_idx, consts=s.consts, slots=s.slots,
+                eqs=s.eqs, shared=s.shared, new=s.new, owners=s.owners,
+                gather=s.gather, scan_cap=max(int(caps[i]), s.scan_cap),
+                param_slots=s.param_slots,
+                block_fanout_cap=s.block_fanout_cap))
+        else:
+            steps.append(noop_step(caps[i]))
+    tcap = max(plan.table_cap, int(table_cap)) if table_cap is not None \
+        else plan.table_cap
+    return PhysicalPlan(
+        query=plan.query, ppn=plan.ppn, n_shards=plan.n_shards,
+        n_vars=plan.n_vars, var_names=plan.var_names, steps=steps,
+        table_cap=tcap, n_params=plan.n_params,
+        meta=dict(plan.meta, padded_from=len(plan.steps)))

@@ -1,25 +1,137 @@
-"""KG query-serving driver (the paper's system, end to end):
+"""KG query-serving driver — batched workload execution:
 
-  python -m repro.launch.serve --dataset lubm --n-shards 3 --method wawpart
+  python -m repro.launch.serve --dataset lubm --n-shards 3 --method wawpart \
+      --batch 64
 
-Builds the dataset, partitions it for its published workload, compiles every
-query plan, executes the workload, and prints per-query latency + plan shape.
+Builds the dataset, partitions it for its published workload, buckets the
+query plans by shape (see engine/batch.py), compiles one engine per bucket,
+and serves the request stream batch-by-batch, reporting throughput
+(queries/sec) and the compile count per partitioning method.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partitioner import (centralized_partition, random_partition,
-                                    wawpart_partition)
-from repro.engine.federated import ShardedKG, make_engine
+from repro.core.partitioner import (Partitioning, centralized_partition,
+                                    random_partition, wawpart_partition)
+from repro.engine.batch import (EngineCache, assemble_batch, bucket_plans,
+                                extract_batch, shard_perms)
+from repro.engine.federated import ShardedKG
 from repro.engine.planner import make_plan
 from repro.kg.generator import generate_bsbm, generate_lubm
 from repro.kg.workloads import bsbm_queries, lubm_queries
+
+
+class WorkloadServer:
+    """Serve a stream of (query_name, params) requests with bucketed engines.
+
+    Plans for the workload's template queries are built once, grouped into
+    shape buckets, and each bucket's engine is compiled on first use (the
+    `EngineCache` is shared across buckets and, if passed in, across servers,
+    so identical bucket signatures — e.g. the same workload under two
+    partitionings with equal capacities — reuse one compiled program).
+    """
+
+    def __init__(self, queries, part: Partitioning, *,
+                 join_impl: str = "sorted", max_per_row: int | None = None,
+                 gather_cap: int | None = None,
+                 params_spec: dict[str, dict] | None = None,
+                 cache: EngineCache | None = None):
+        import jax.numpy as jnp
+
+        self.part = part
+        self.kg = ShardedKG.build(part)
+        self.join_impl = join_impl
+        self.max_per_row = max_per_row
+        self.gather_cap = gather_cap
+        self.cache = cache if cache is not None else EngineCache()
+
+        params_spec = params_spec or {}
+        plans = [make_plan(q, part, params=params_spec.get(q.name))
+                 for q in queries]
+        self.buckets = bucket_plans(plans)
+        self.route: dict[str, tuple[int, int]] = {}   # name -> (bucket, idx)
+        for bi, b in enumerate(self.buckets):
+            for pi, plan in enumerate(b.plans):
+                self.route[plan.query.name] = (bi, pi)
+        self._tr = jnp.asarray(self.kg.triples)
+        self._va = jnp.asarray(self.kg.valid)
+        self._perms = jnp.asarray(shard_perms(self.kg))
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_compiles(self) -> int:
+        return self.cache.misses
+
+    def _engine(self, bucket):
+        return self.cache.get(bucket.signature, join_impl=self.join_impl,
+                              max_per_row=self.max_per_row,
+                              gather_cap=self.gather_cap)
+
+    def serve(self, requests: list[tuple[str, np.ndarray | None]],
+              block: bool = True):
+        """Execute one batch of requests; results align with request order.
+
+        Requests are grouped per bucket (one engine dispatch per bucket that
+        appears in the batch) and each result is (solutions, count, overflow).
+        """
+        import jax
+
+        by_bucket: dict[int, list[tuple[int, int, np.ndarray | None]]] = {}
+        for r, (name, pv) in enumerate(requests):
+            bi, pi = self.route[name]
+            by_bucket.setdefault(bi, []).append((r, pi, pv))
+
+        results: list = [None] * len(requests)
+        for bi, items in by_bucket.items():
+            bucket = self.buckets[bi]
+            reqs = [(pi, pv) for _, pi, pv in items]
+            # pad the batch axis to a power of two: per-bucket batch sizes
+            # vary with the stream's phase, and every new size would be a
+            # fresh jit specialization (a recompile mid-steady-state)
+            n_pad = 1 << max(0, len(reqs) - 1).bit_length()
+            reqs += [(0, None)] * (n_pad - len(reqs))
+            fn = self._engine(bucket)
+            pd, params = assemble_batch(bucket, reqs)
+            out = fn(self._tr, self._va, self._perms, pd, params)
+            if block:
+                jax.block_until_ready(out)
+            # fillers sit at the tail: truncate before the host-side
+            # extraction (np.unique per request) rather than after
+            extracted = extract_batch(bucket, reqs[:len(items)], *out)
+            for (r, _, _), res in zip(items, extracted):
+                results[r] = res
+        return results
+
+    def warmup(self, requests) -> None:
+        """Compile every bucket the request stream touches."""
+        self.serve(requests)
+
+
+def build_dataset(dataset: str, scale: float, seed: int = 0):
+    if dataset == "lubm":
+        return generate_lubm(1, scale=scale, seed=seed), lubm_queries()
+    return generate_bsbm(int(1000 * scale), seed=seed), bsbm_queries()
+
+
+def build_partition(method: str, store, queries, n_shards: int):
+    if method == "wawpart":
+        return wawpart_partition(store, queries, n_shards=n_shards)
+    if method == "random":
+        return random_partition(store, queries, n_shards=n_shards, seed=0)
+    return centralized_partition(store, queries)
+
+
+def request_stream(queries, n_requests: int
+                   ) -> list[tuple[str, np.ndarray | None]]:
+    """Round-robin over the workload's template queries."""
+    return [(queries[i % len(queries)].name, None) for i in range(n_requests)]
 
 
 def main() -> None:
@@ -30,46 +142,50 @@ def main() -> None:
     ap.add_argument("--method", choices=("wawpart", "random", "centralized"),
                     default="wawpart")
     ap.add_argument("--join", choices=("expand", "sorted"), default="sorted")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="requests per serve() call")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="total requests in the stream")
+    ap.add_argument("--max-per-row", type=int, default=0,
+                    help="ceiling on the merge-join window (0 = auto: "
+                         "per-step data-sized fan-out caps; lowering it "
+                         "saves compute but can trip the overflow flag)")
     args = ap.parse_args()
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
 
-    if args.dataset == "lubm":
-        store = generate_lubm(1, scale=args.scale, seed=0)
-        queries = lubm_queries()
-    else:
-        store = generate_bsbm(int(1000 * args.scale), seed=0)
-        queries = bsbm_queries()
-
+    store, queries = build_dataset(args.dataset, args.scale)
     t0 = time.time()
-    if args.method == "wawpart":
-        part = wawpart_partition(store, queries, n_shards=args.n_shards)
-    elif args.method == "random":
-        part = random_partition(store, queries, n_shards=args.n_shards,
-                                seed=0)
-    else:
-        part = centralized_partition(store, queries)
-    kg = ShardedKG.build(part)
+    part = build_partition(args.method, store, queries, args.n_shards)
+    server = WorkloadServer(queries, part, join_impl=args.join,
+                            max_per_row=args.max_per_row or None)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
-          f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning)")
+          f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
+          f"{len(queries)} template queries in {server.n_buckets} buckets")
 
-    tr, va = jnp.asarray(kg.triples), jnp.asarray(kg.valid)
-    total = 0.0
-    for q in queries:
-        plan = make_plan(q, part)
-        eng = make_engine(plan, join_impl=args.join, max_per_row=256)
-        fn = jax.jit(jax.vmap(eng, in_axes=(0, 0, None), axis_name="shards"))
-        p = jnp.zeros((max(1, plan.n_params),), jnp.int32)
-        out = fn(tr, va, p)
-        jax.block_until_ready(out)          # compile
-        t0 = time.perf_counter()
-        out = fn(tr, va, p)
-        jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) * 1e3
-        total += dt
-        n = int(np.asarray(out[1][plan.ppn]).sum())
-        print(f"  {q.name:10s} {dt:8.2f} ms  solutions={n:6d} "
-              f"gathers={plan.n_gathers} ppn=shard{plan.ppn}"
-              f"{'  [LOCAL]' if plan.is_local else ''}")
-    print(f"workload total: {total:.1f} ms")
+    stream = request_stream(queries, args.requests)
+    # warm every (bucket, padded batch size) shape the stream will produce —
+    # serving throughput below is steady-state, compile-free
+    for i in range(0, len(stream), args.batch):
+        server.warmup(stream[i:i + args.batch])
+
+    t0 = time.perf_counter()
+    served = 0
+    n_solutions = 0
+    overflows = 0
+    while served < len(stream):
+        chunk = stream[served:served + args.batch]
+        for _, n, ovf in server.serve(chunk):
+            n_solutions += n
+            overflows += bool(ovf)
+        served += len(chunk)
+    dt = time.perf_counter() - t0
+
+    print(f"served {served} requests in {dt*1e3:.1f} ms  "
+          f"({served/dt:,.0f} queries/sec, batch={args.batch})")
+    print(f"  solutions={n_solutions:,}  overflows={overflows}  "
+          f"compiled engines={server.n_compiles} "
+          f"(<= {server.n_buckets} buckets)")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,11 @@
 """Jaccard distance + HAC properties (hypothesis) and numpy-vs-JAX parity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property tests skip cleanly
+    from conftest import given, settings, st
 
 from repro.core.distance import jaccard_distance_from_membership
 from repro.core.hac import LINKAGES, cut, linkage_jax, linkage_numpy

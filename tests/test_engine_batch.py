@@ -1,0 +1,194 @@
+"""Batched serving engine: differential correctness vs the per-query engine
+and the host oracle, bucket/padding invariants, and the compile cache."""
+import numpy as np
+import pytest
+
+from repro.core.partitioner import (centralized_partition, random_partition,
+                                    wawpart_partition)
+from repro.engine.batch import (EngineCache, bucket_plans, run_batched,
+                                shard_perms)
+from repro.engine.federated import ShardedKG, run_vmapped
+from repro.engine.oracle import evaluate_bgp
+from repro.engine.planner import make_plan, pad_plan
+from repro.kg.query import Query, TriplePattern as T, c, v
+from repro.kg.triples import TripleStore
+from repro.kg.workloads import lubm_queries
+
+
+def _partitions(store, queries):
+    return [
+        ("wawpart", wawpart_partition(store, queries, n_shards=3)),
+        ("random", random_partition(store, queries, n_shards=3, seed=0)),
+        ("centralized", centralized_partition(store, queries)),
+    ]
+
+
+def _check_bucket(store, kg, bucket, impl, cache, max_per_row=192):
+    # batched engine: data-sized per-step fan-out caps (max_per_row=None);
+    # per-query comparison still takes an explicit global window
+    res = run_batched(bucket, kg, join_impl=impl, cache=cache)
+    for (rows, n, ovf), plan in zip(res, bucket.plans):
+        name = plan.query.name
+        oracle = evaluate_bgp(store, plan.query)
+        assert not ovf, name
+        assert np.array_equal(rows, oracle), name
+        pq_rows, pq_n, pq_ovf = run_vmapped(plan, kg, join_impl=impl,
+                                            max_per_row=max_per_row)
+        assert not pq_ovf, name
+        assert np.array_equal(rows, pq_rows), name
+        assert n == pq_n == oracle.shape[0], name
+
+
+@pytest.mark.parametrize("impl", ["expand", "sorted"])
+def test_lubm_batched_equals_oracle_and_per_query(lubm_small, impl):
+    qs = lubm_queries()
+    for method, part in _partitions(lubm_small, qs):
+        kg = ShardedKG.build(part)
+        buckets = bucket_plans([make_plan(q, part) for q in qs])
+        cache = EngineCache()
+        for b in buckets:
+            _check_bucket(lubm_small, kg, b, impl, cache)
+
+
+@pytest.mark.parametrize("impl", ["expand", "sorted"])
+def test_random_bgps_batched_differential(impl):
+    """Randomized stores + queries: batched == per-query == oracle."""
+    terms = [f"e{i}" for i in range(12)]
+    preds = [f"p{i}" for i in range(3)]
+    for trial in range(6):
+        r = np.random.default_rng(trial)
+        triples = [(terms[r.integers(12)], preds[r.integers(3)],
+                    terms[r.integers(12)]) for _ in range(40)]
+        store = TripleStore.from_string_triples(triples)
+        queries = []
+        vars_ = [v("X"), v("Y"), v("Z")]
+        for qi in range(4):
+            n_pat = int(r.integers(1, 4))
+            pats = []
+            for _ in range(n_pat):
+                # subjects drawn from {X, Y} keep most patterns connected
+                s = vars_[r.integers(2)] if r.random() < 0.8 \
+                    else c(terms[r.integers(2)])
+                o = vars_[r.integers(3)] if r.random() < 0.7 \
+                    else c(terms[r.integers(2)])
+                pats.append(T(s, c(preds[r.integers(3)]), o))
+            queries.append(Query(f"RQ{trial}_{qi}", tuple(pats)))
+        for method, part in _partitions(store, queries):
+            kg = ShardedKG.build(part)
+            buckets = bucket_plans([make_plan(q, part) for q in queries])
+            cache = EngineCache()
+            for b in buckets:
+                _check_bucket(store, kg, b, impl, cache)
+
+
+def test_parameterized_batch_instances(lubm_small):
+    """Many user instances of one template query in one batch: each result
+    equals the oracle on the correspondingly re-constantized query."""
+    qs = lubm_queries()
+    d = lubm_small.dictionary
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    # LUBM-Q13 (alumni of <uni>): parameterize the object of pattern 1
+    template = qs[12]
+    plan = make_plan(template, part, params={(1, 2): 0}, cap_margin=4.0)
+    buckets = bucket_plans([plan])
+    unis = [t for t in (f"ub:University{i}" for i in range(4)) if t in d]
+    assert len(unis) >= 1
+    requests = [(0, np.asarray([d.id_of(u)], np.int32))
+                for u in unis for _ in range(2)]
+    res = run_batched(buckets[0], kg, requests, join_impl="sorted")
+    for (rows, n, ovf), (_, pv) in zip(res, requests):
+        uni = d.term_of(int(pv[0]))
+        inst = Query(template.name, (
+            template.patterns[0],
+            T(template.patterns[1].s, template.patterns[1].p, c(uni)),
+        ))
+        assert not ovf
+        assert np.array_equal(rows, evaluate_bgp(lubm_small, inst)), uni
+
+
+def test_padded_noop_steps_are_identity(lubm_small):
+    """A plan padded with no-op steps returns the same solutions/overflow as
+    the unpadded plan — through the per-query engine AND the batched one."""
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    for q in (qs[0], qs[4], qs[10]):     # 2-, 2-, and 3-step plans
+        plan = make_plan(q, part)
+        padded = pad_plan(plan, len(plan.steps) + 3)
+        assert sum(1 for s in padded.steps if s.is_noop) == 3
+        base = run_vmapped(plan, kg, join_impl="sorted", max_per_row=192)
+        thru = run_vmapped(padded, kg, join_impl="sorted", max_per_row=192)
+        assert np.array_equal(base[0], thru[0]) and base[2] == thru[2]
+        # batched: bucket the padded plan alone
+        (b,) = bucket_plans([padded])
+        (rows, n, ovf), = run_batched(b, kg, join_impl="sorted")
+        assert not ovf and np.array_equal(rows, base[0])
+
+
+def test_bucketing_invariants(lubm_small):
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    plans = [make_plan(q, part) for q in qs]
+    buckets = bucket_plans(plans)
+    assert sum(len(b.plans) for b in buckets) == len(plans)
+    assert len(buckets) < len(plans)     # bucketing actually groups
+    for b in buckets:
+        sig = b.signature
+        for p in b.plans:
+            assert len(p.steps) == sig.n_steps
+            assert p.table_cap == sig.table_cap
+            assert p.n_vars <= sig.n_vars
+            for step, cap in zip(p.steps, sig.scan_caps):
+                assert step.scan_cap == cap
+        # every query routes to exactly one bucket slot
+    names = [p.query.name for b in buckets for p in b.plans]
+    assert sorted(names) == sorted(q.name for q in qs)
+
+
+def test_engine_cache_reuse(lubm_small):
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    buckets = bucket_plans([make_plan(q, part) for q in qs])
+    cache = EngineCache()
+    for b in buckets:
+        run_batched(b, kg, join_impl="sorted", cache=cache)
+    assert cache.misses == len(buckets)
+    for b in buckets:                    # second pass: all hits
+        run_batched(b, kg, join_impl="sorted", cache=cache)
+    assert cache.misses == len(buckets)
+    assert cache.hits == len(buckets)
+
+
+@pytest.mark.parametrize("impl", ["expand", "sorted"])
+def test_edge_queries_batched(impl):
+    """0-var asks, never-match constants, semijoin steps, intra-pattern
+    equality — the plan shapes most likely to break data-driven joins."""
+    triples = [(f"s{i}", "p", f"o{i % 3}") for i in range(9)]
+    triples += [("s0", "q", "o9")]
+    store = TripleStore.from_string_triples(triples)
+    qs = [
+        Query("ASK-HIT", (T(c("s0"), c("p"), c("o0")),)),
+        Query("ASK-MISS", (T(c("s1"), c("p"), c("o0")),)),
+        Query("UNKNOWN", (T(v("X"), c("nosuch"), v("Y")),)),
+        Query("MIX", (T(v("X"), c("p"), v("Y")),
+                      T(c("s0"), c("q"), c("o9")))),      # semijoin step
+        Query("SELFEQ", (T(v("X"), c("p"), v("X")),)),
+    ]
+    for method, part in _partitions(store, qs)[:1] + [
+            ("centralized", centralized_partition(store, qs))]:
+        kg = ShardedKG.build(part)
+        for b in bucket_plans([make_plan(q, part) for q in qs]):
+            _check_bucket(store, kg, b, impl, EngineCache(), max_per_row=32)
+
+
+def test_shard_perms_sorted_views(lubm_small):
+    part = wawpart_partition(lubm_small, lubm_queries(), n_shards=3)
+    kg = ShardedKG.build(part)
+    perms = shard_perms(kg)
+    assert perms.shape == (kg.n_shards, 3, kg.cap)
+    for s in range(kg.n_shards):
+        for pos in range(3):
+            view = kg.triples[s, perms[s, pos], pos]
+            assert (np.diff(view) >= 0).all()

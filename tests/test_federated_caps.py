@@ -1,0 +1,95 @@
+"""Static-capacity paths of the federated engine: gather_cap compaction and
+overflow-flag propagation (previously untested)."""
+import numpy as np
+import pytest
+
+from repro.core.features import build_unit_catalog
+from repro.core.partitioner import Partitioning, wawpart_partition
+from repro.engine.federated import ShardedKG, run_vmapped
+from repro.engine.oracle import evaluate_bgp
+from repro.engine.planner import make_plan
+from repro.kg.query import Query, TriplePattern as T, c, v
+from repro.kg.triples import TripleStore
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """12 p-triples whose data units land on 2 shards + a distractor
+    predicate, and a single-pattern query that must gather cross-shard.
+    Helper queries with constant objects split p into PO units so the
+    partitioner can spread p's data at all."""
+    triples = [(f"s{i}", "p", f"o{i % 4}") for i in range(12)]
+    triples += [(f"s{i}", "q", "o0") for i in range(8)]
+    store = TripleStore.from_string_triples(triples)
+    q = Query("GQ", (T(v("X"), c("p"), v("Y")),))
+    helpers = [Query(f"H{i}", (T(v("X"), c("p"), c(f"o{i}")),))
+               for i in range(4)]
+    cat = build_unit_catalog(store, [q] + helpers)
+    units = sorted(cat.units, key=repr)
+    unit_shard = {u: i % 2 for i, u in enumerate(units)}  # p spans both
+    sizes = np.zeros(2, dtype=np.int64)
+    for u, s in unit_shard.items():
+        sizes[s] += cat.sizes.get(u, 0)
+    part = Partitioning(2, unit_shard, cat, sizes, method="manual")
+    assert make_plan(q, part).n_gathers
+    return store, q, part
+
+
+def _gather_plan(store, q, part):
+    plan = make_plan(q, part)
+    # the single pattern must actually be federated for gather_cap to engage
+    assert plan.n_gathers
+    return plan
+
+
+def test_gather_cap_above_matches_is_lossless(tiny):
+    store, q, part = tiny
+    kg = ShardedKG.build(part)
+    plan = _gather_plan(store, q, part)
+    oracle = evaluate_bgp(store, q)
+    n_matches = oracle.shape[0]
+    for cap in (n_matches, n_matches + 1, 64):
+        rows, n, ovf = run_vmapped(plan, kg, gather_cap=cap)
+        assert not ovf, cap
+        assert np.array_equal(rows, oracle), cap
+
+
+def test_gather_cap_overflow_trips_exactly_at_capacity(tiny):
+    store, q, part = tiny
+    kg = ShardedKG.build(part)
+    plan = _gather_plan(store, q, part)
+    n_matches = evaluate_bgp(store, q).shape[0]
+    assert n_matches >= 3
+    # below capacity: overflow must trip (results may silently truncate
+    # otherwise — the flag is the engine's only lossiness signal)
+    for cap in (1, n_matches - 1):
+        _, _, ovf = run_vmapped(plan, kg, gather_cap=cap)
+        assert ovf, cap
+    _, _, ovf = run_vmapped(plan, kg, gather_cap=n_matches)
+    assert not ovf
+
+
+def test_scan_cap_overflow_propagates(tiny):
+    """Undersized per-step scan capacities must raise the overflow flag."""
+    store, q, part = tiny
+    kg = ShardedKG.build(part)
+    ref = make_plan(q, part)
+    squeezed = make_plan(q, part, capacities=([2], ref.table_cap))
+    _, _, ovf = run_vmapped(squeezed, kg)
+    assert ovf
+    # generous caps: no overflow, oracle-exact
+    rows, _, ovf = run_vmapped(ref, kg)
+    assert not ovf and np.array_equal(rows, evaluate_bgp(store, q))
+
+
+def test_table_cap_overflow_propagates(lubm_small):
+    qs = [Query("ALL", (T(v("X"), c("rdf:type"), v("Y")),))]
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    ref = make_plan(qs[0], part)
+    n_sol = evaluate_bgp(lubm_small, qs[0]).shape[0]
+    assert n_sol > 8
+    caps = [s.scan_cap for s in ref.steps]
+    squeezed = make_plan(qs[0], part, capacities=(caps, 8))
+    _, _, ovf = run_vmapped(squeezed, kg)
+    assert ovf

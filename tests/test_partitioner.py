@@ -1,7 +1,11 @@
 """Algorithm 2 invariants: totality, no replication, balance, objective."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property tests skip cleanly
+    from conftest import given, settings, st
 
 from repro.core.partitioner import (centralized_partition, random_partition,
                                     wawpart_partition, workload_join_stats)
