@@ -1,18 +1,31 @@
-"""Workload-serving throughput: batched bucket engines vs per-query serving.
+"""Workload-serving throughput: batched bucket engines vs per-query serving,
+vmap simulation vs shard_map on a real mesh.
 
 Serves a round-robin LUBM request stream under each partitioning method:
   * batch=1 baseline — the pre-batching architecture: one compiled engine per
     query (plan-exact shapes), dispatched serially per request;
   * batch=1/8/64 bucketed — the WorkloadServer slices the stream into batches
-    and runs each through the shape-bucket engines (engine/batch.py).
+    and runs each through the shape-bucket engines (engine/batch.py);
+  * batch=64 shard_map — the same bucket engines under shard_map on a real
+    mesh axis (one device per shard; standalone runs force an 8-device host
+    platform), with per-bucket collective counts — the WawPart cut counts —
+    reported alongside.
 
 Reports steady-state queries/sec (compilation excluded; compile counts are
 reported separately — the bucketed server must compile at most one engine per
 bucket, vs one per distinct query for the baseline).
+
+--smoke runs a tiny configuration (CI rot-guard): one method, few requests,
+single timing iteration.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+METHODS = ("wawpart", "random", "centralized")
 
 
 def _steady(fn, iters: int) -> float:
@@ -26,7 +39,8 @@ def _steady(fn, iters: int) -> float:
 
 
 def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
-        max_per_row: int = 64) -> dict:
+        max_per_row: int = 64, methods: tuple[str, ...] = METHODS,
+        n_shards: int = 3, sharded: bool = True) -> dict:
     # The bucketed server sizes its merge-join windows from the data (per
     # step); max_per_row here is only the per-query baseline's window, which
     # must cover the workload's true join fan-out: LUBM Q7/Q8 overflow (and
@@ -34,6 +48,7 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
     # keep the bench honest — throughput of a lossy config is not throughput.
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.engine.federated import make_engine
     from repro.engine.planner import make_plan
@@ -44,14 +59,18 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
     stream = request_stream(queries, n_requests)
     out: dict = {"_meta": {"n_triples": len(store),
                            "n_requests": n_requests}}
-    for method in ("wawpart", "random", "centralized"):
-        part = build_partition(method, store, queries, 3)
+    for method in methods:
+        part = build_partition(method, store, queries, n_shards)
         rows = {}
 
         # -- baseline: per-query engines, one dispatch per request ---------
-        server = WorkloadServer(queries, part)
-        n_overflow = sum(bool(ovf) for _, _, ovf
-                         in server.serve(stream))
+        # dedup=False on every timed server: the round-robin stream repeats
+        # each template, so scan-dedup would collapse a 64-batch to 14
+        # executed instances and the batch rows would measure dedup, not
+        # batching. Dedup gets its own explicitly-labeled row below.
+        server = WorkloadServer(queries, part, dedup=False)
+        base_res = server.serve(stream)
+        n_overflow = sum(bool(ovf) for _, _, ovf in base_res)
         assert n_overflow == 0, \
             f"{method}: {n_overflow} overflows — raise max_per_row"
         engines = {}
@@ -95,20 +114,87 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
                 "compiles": server.n_compiles, "buckets": server.n_buckets}
         assert server.n_compiles <= server.n_buckets, \
             (server.n_compiles, server.n_buckets)
+
+        # -- batch=64 with scan-dedup (identical requests collapse) --------
+        dd = WorkloadServer(queries, part, cache=server.cache)
+        dd_res = dd.serve(stream)
+        for (a, _, _), (b, _, _) in zip(base_res, dd_res):
+            assert np.array_equal(a, b), f"{method}: dedup mismatch"
+
+        def dedup_64():
+            for i in range(0, len(stream), 64):
+                dd.serve(stream[i:i + 64])
+
+        dt = _steady(dedup_64, iters)
+        dd.reset_stats()
+        dd.serve(stream[:64])
+        rows["batch64_dedup"] = {
+            "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
+            "compiles": dd.n_compiles,
+            "executed_per_64": dd.stats["executed"]}
+
+        # -- shard_map on a real mesh: one device per shard ----------------
+        if sharded and len(jax.devices()) >= part.n_shards:
+            from repro.launch.mesh import make_engine_mesh
+            mesh = make_engine_mesh(part.n_shards)
+            sm = WorkloadServer(queries, part, mesh=mesh, dedup=False)
+            # honesty check: the distributed path must serve the same
+            # solutions as the vmap simulation before its throughput counts
+            sm_res = sm.serve(stream)
+            for (a, _, _), (b, _, _) in zip(base_res, sm_res):
+                assert np.array_equal(a, b), f"{method}: shard_map mismatch"
+
+            def sharded_64():
+                for i in range(0, len(stream), 64):
+                    sm.serve(stream[i:i + 64])
+
+            dt = _steady(sharded_64, iters)
+            rows["batch64_shard_map"] = {
+                "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
+                "compiles": sm.n_compiles,
+                "collectives": sm.collective_counts(),
+                "devices": part.n_shards}
+        elif sharded:
+            print(f"serve/{method}/batch64_shard_map,skipped,"
+                  f"need_{part.n_shards}_devices_have_{len(jax.devices())}",
+                  file=sys.stderr)
         out[method] = rows
     return out
 
 
-def main() -> None:
-    res = run()
-    meta = res.pop("_meta")
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration: one method, 16 requests, "
+                         "1 timing iteration")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the shard_map-on-mesh section")
+    args = ap.parse_args(argv)
+
+    sharded = not args.no_sharded
+    if sharded and "jax" not in sys.modules:
+        # standalone invocation: force the 8-device host platform before the
+        # first jax import so the mesh section has one device per shard
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+    if args.smoke:
+        res = run(scale=0.05, n_requests=16, iters=1,
+                  methods=("wawpart",), sharded=sharded)
+    else:
+        res = run(sharded=sharded)
+
+    res.pop("_meta")
     for method, rows in res.items():
         for label, r in rows.items():
             derived = f"qps={r['qps']:.0f};compiles={r['compiles']}"
+            if "collectives" in r:
+                derived += ";collectives=" + "|".join(
+                    str(c) for c in r["collectives"])
             print(f"serve/{method}/{label},{r['us_per_req']:.1f},{derived}")
-    ww = res["wawpart"]
-    ratio = ww["batch64"]["qps"] / ww["batch1_perquery"]["qps"]
-    print(f"serve/wawpart/batch64_vs_batch1,{ratio:.2f},"
+    first = next(iter(res.values()))
+    ratio = first["batch64"]["qps"] / first["batch1_perquery"]["qps"]
+    print(f"serve/{next(iter(res))}/batch64_vs_batch1,{ratio:.2f},"
           f"x_speedup_over_per_query_serving")
 
 

@@ -10,8 +10,15 @@ to collective-free programs. The same engine function runs under
 from repro.engine.planner import PhysicalPlan, make_plan, pad_plan
 from repro.engine.oracle import evaluate_bgp
 from repro.engine.batch import (BucketSignature, EngineCache, PlanBucket,
-                                bucket_plans, make_batched_engine, run_batched)
+                                bucket_collectives, bucket_plans,
+                                count_hlo_collectives, dedup_requests,
+                                make_batched_engine,
+                                make_sharded_batched_engine, run_batched,
+                                run_sharded_batched)
 
 __all__ = ["PhysicalPlan", "make_plan", "pad_plan", "evaluate_bgp",
-           "BucketSignature", "EngineCache", "PlanBucket", "bucket_plans",
-           "make_batched_engine", "run_batched"]
+           "BucketSignature", "EngineCache", "PlanBucket",
+           "bucket_collectives", "bucket_plans", "count_hlo_collectives",
+           "dedup_requests", "make_batched_engine",
+           "make_sharded_batched_engine", "run_batched",
+           "run_sharded_batched"]

@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.federated import AXIS, ShardedKG, compact
+from repro.engine.federated import (AXIS, ShardedKG, check_gather_cap,
+                                    check_mesh, compact, raise_on_overflow)
 from repro.engine.planner import PhysicalPlan, pad_plan
 
 _EQ_PAIRS = ((0, 1), (0, 2), (1, 2))
@@ -74,6 +75,28 @@ class BucketSignature:
     param_bits: tuple[bool, ...]
     noop_bits: tuple[bool, ...]
     new_modes: tuple[str, ...]       # "all" | "none" | "mixed"
+
+
+def bucket_collectives(sig: BucketSignature) -> int:
+    """Number of gather sites the bucket engine traces: one per step where
+    any member plan's pattern owners are not covered by its PPN. Under
+    shard_map each site lowers to all_gather collectives (two ops: matches +
+    mask); under vmap simulation the same sites lower to collective-free
+    reshapes. The WawPart objective (minimize partition cuts) is exactly
+    minimizing this count."""
+    if sig.n_shards <= 1:
+        return 0
+    return sum(1 for g in sig.gather_bits if g)
+
+
+def count_hlo_collectives(text: str) -> int:
+    """Count all_gather/all_reduce ops in lowered StableHLO text (from
+    ``jitted.lower(...).as_text()``) — the verification side of the
+    collective-count-as-cut-count invariant: for a sharded bucket engine this
+    equals 2 * bucket_collectives(sig) (matches + mask per gather site); for
+    the vmap simulation it is 0 (the same gathers lower to reshapes)."""
+    return (text.count("stablehlo.all_gather")
+            + text.count("stablehlo.all_reduce"))
 
 
 @dataclass
@@ -427,6 +450,7 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
     dept->students) must not widen every other step's window; pass an int
     only to clamp it further (risking overflow, which the flag reports).
     """
+    check_gather_cap(gather_cap)
     S, L, V, R = sig.n_shards, sig.n_steps, sig.n_vars, sig.table_cap
 
     def engine(triples: jax.Array, valid: jax.Array, perms: jax.Array,
@@ -491,12 +515,54 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
     return engine
 
 
+def make_sharded_batched_engine(sig: BucketSignature, mesh, *,
+                                join_impl: str = "expand",
+                                max_per_row: int | None = None,
+                                gather_cap: int | None = None,
+                                axis_name: str = AXIS):
+    """shard_map counterpart of the vmapped bucket engine: same call shape
+    fn(triples, valid, perms, pdata, params) -> (table, mask, overflow) with
+    a (batch, shard, ...) result layout, but the shard axis is a real mesh
+    axis — KG tensors live one block per device (sharding.rules.kg_specs),
+    scans/joins run shard-locally, and only the plan steps whose owner
+    metadata marks a partition cut emit all_gather collectives. Batch
+    vmapping happens *inside* the shard_map kernel, so per-device programs
+    stay single-dispatch per bucket per batch.
+    """
+    from repro.sharding.rules import (kg_out_specs, kg_specs,
+                                      shard_map_compat)
+
+    check_mesh(mesh, sig.n_shards, axis_name)
+    engine = make_batched_engine(sig, join_impl=join_impl,
+                                 max_per_row=max_per_row,
+                                 gather_cap=gather_cap, axis_name=axis_name)
+
+    def kernel(triples, valid, perms, pd, params):
+        t, m, o = jax.vmap(engine, in_axes=(None, None, None, 0, 0))(
+            triples[0], valid[0], perms[0], pd, params)
+        return t[None], m[None], o[None]
+
+    sm = shard_map_compat(kernel, mesh=mesh, in_specs=kg_specs(axis_name),
+                          out_specs=kg_out_specs(axis_name))
+
+    def fn(triples, valid, perms, pd, params):
+        t, m, o = sm(triples, valid, perms, pd, params)
+        # (shard, batch, ...) -> (batch, shard, ...): match the vmap path's
+        # layout so extract_batch serves both
+        return (jnp.swapaxes(t, 0, 1), jnp.swapaxes(m, 0, 1),
+                jnp.swapaxes(o, 0, 1))
+
+    return jax.jit(fn)
+
+
 class EngineCache:
     """Compile cache: one jitted bucket engine per (signature, options).
 
     `misses` counts engine builds — the bench's "compile count ≤ number of
     buckets" check reads it (jax.jit re-specializes internally per batch
-    shape, which the steady-state serving loop never changes).
+    shape, which the steady-state serving loop never changes). A mesh keys
+    the shard_map variant: vmapped and sharded engines for one signature are
+    distinct programs and cache side by side.
     """
 
     def __init__(self) -> None:
@@ -506,18 +572,23 @@ class EngineCache:
 
     def get(self, sig: BucketSignature, *, join_impl: str = "expand",
             max_per_row: int | None = None, gather_cap: int | None = None,
-            axis_name: str = AXIS):
-        key = (sig, join_impl, max_per_row, gather_cap, axis_name)
+            axis_name: str = AXIS, mesh=None):
+        key = (sig, join_impl, max_per_row, gather_cap, axis_name, mesh)
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
-            engine = make_batched_engine(
-                sig, join_impl=join_impl, max_per_row=max_per_row,
-                gather_cap=gather_cap, axis_name=axis_name)
-            fn = jax.jit(jax.vmap(
-                jax.vmap(engine, in_axes=(0, 0, 0, None, None),
-                         axis_name=axis_name),           # shard axis
-                in_axes=(None, None, None, 0, 0)))       # batch axis
+            if mesh is not None:
+                fn = make_sharded_batched_engine(
+                    sig, mesh, join_impl=join_impl, max_per_row=max_per_row,
+                    gather_cap=gather_cap, axis_name=axis_name)
+            else:
+                engine = make_batched_engine(
+                    sig, join_impl=join_impl, max_per_row=max_per_row,
+                    gather_cap=gather_cap, axis_name=axis_name)
+                fn = jax.jit(jax.vmap(
+                    jax.vmap(engine, in_axes=(0, 0, 0, None, None),
+                             axis_name=axis_name),           # shard axis
+                    in_axes=(None, None, None, 0, 0)))       # batch axis
             self._fns[key] = fn
         else:
             self.hits += 1
@@ -567,27 +638,85 @@ def extract_batch(bucket: PlanBucket,
     return out
 
 
+def dedup_requests(requests: list[tuple[int, np.ndarray | None]]
+                   ) -> tuple[list[tuple[int, np.ndarray | None]], list[int]]:
+    """Collapse identical (plan, params) requests to one scanned instance.
+
+    Returns (unique, inverse) with requests[i] equivalent to
+    unique[inverse[i]] — the engine executes only the unique instances and
+    results fan back out at delivery (extract_fanout). A workload stream of
+    many users issuing the same template instance pays for one scan."""
+    seen: dict[tuple[int, bytes | None], int] = {}
+    unique: list[tuple[int, np.ndarray | None]] = []
+    inverse: list[int] = []
+    for idx, pv in requests:
+        key = (idx, None if pv is None
+               else np.asarray(pv, np.int32).tobytes())
+        j = seen.get(key)
+        if j is None:
+            j = seen[key] = len(unique)
+            unique.append((idx, pv))
+        inverse.append(j)
+    return unique, inverse
+
+
+def extract_fanout(bucket: PlanBucket, unique, inverse: list[int],
+                   table, tmask, overflow):
+    """extract_batch on the unique instances, fanned back to request order.
+
+    The per-unique host-side work (np.unique dedup/sort) also runs once per
+    instance, not once per request."""
+    res = extract_batch(bucket, unique, table, tmask, overflow)
+    return [res[j] for j in inverse]
+
+
 def run_batched(bucket: PlanBucket, kg: ShardedKG,
                 requests: list[tuple[int, np.ndarray | None]] | None = None,
                 *, join_impl: str = "expand", max_per_row: int | None = None,
                 gather_cap: int | None = None, cache: EngineCache | None = None,
-                perms: np.ndarray | None = None):
-    """Execute a batch of requests against one bucket (vmap simulation).
+                perms: np.ndarray | None = None, mesh=None,
+                dedup: bool = False, strict: bool = False):
+    """Execute a batch of requests against one bucket.
 
+    mesh=None runs the vmap simulation; a mesh routes through the shard_map
+    engine (one device per shard, collectives only at partition cuts).
     requests defaults to one zero-params request per member plan. perms
     (from shard_perms(kg)) can be passed in to amortize the per-shard sort
-    permutations across calls. Returns the list of per-request
-    (solutions, count, overflow).
+    permutations across calls. dedup=True collapses identical (plan, params)
+    requests to one executed instance. strict=True raises
+    CapacityOverflowError on any request's overflow flag. Returns the list
+    of per-request (solutions, count, overflow).
     """
+    check_gather_cap(gather_cap)
     if requests is None:
         requests = [(i, None) for i in range(len(bucket.plans))]
+    exec_reqs, inverse = dedup_requests(requests) if dedup \
+        else (requests, None)
     cache = cache or EngineCache()
     fn = cache.get(bucket.signature, join_impl=join_impl,
-                   max_per_row=max_per_row, gather_cap=gather_cap)
-    pd, params = assemble_batch(bucket, requests)
+                   max_per_row=max_per_row, gather_cap=gather_cap, mesh=mesh)
+    pd, params = assemble_batch(bucket, exec_reqs)
     if perms is None:
         perms = shard_perms(kg)
     table, tmask, overflow = fn(jnp.asarray(kg.triples),
                                 jnp.asarray(kg.valid),
                                 jnp.asarray(perms), pd, params)
-    return extract_batch(bucket, requests, table, tmask, overflow)
+    if inverse is None:
+        out = extract_batch(bucket, exec_reqs, table, tmask, overflow)
+    else:
+        out = extract_fanout(bucket, exec_reqs, inverse, table, tmask,
+                             overflow)
+    if strict:
+        for (_, _, ovf), (idx, _) in zip(out, requests):
+            raise_on_overflow(ovf, bucket.plans[idx].query.name,
+                              "sharded" if mesh is not None else "vmapped")
+    return out
+
+
+def run_sharded_batched(bucket: PlanBucket, kg: ShardedKG, mesh,
+                        requests: list[tuple[int, np.ndarray | None]] | None
+                        = None, **kw):
+    """shard_map execution of a bucket batch on a real mesh axis: the named
+    entry point the WorkloadServer routes through when given a mesh (mirrors
+    federated.run_sharded for single plans)."""
+    return run_batched(bucket, kg, requests, mesh=mesh, **kw)

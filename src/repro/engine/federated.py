@@ -28,6 +28,53 @@ from repro.engine.planner import PhysicalPlan
 AXIS = "shards"
 
 
+class CapacityOverflowError(RuntimeError):
+    """A static capacity (scan cap, table cap, gather_cap, or merge-join
+    window) was exceeded at run time: the result set is truncated. Raised by
+    the runners under ``strict=True``; otherwise the condition is reported
+    through the returned overflow flag."""
+
+
+def check_gather_cap(gather_cap) -> None:
+    """Validate a gather_cap argument before any tracing happens.
+
+    A non-positive capacity would compact every cross-shard gather down to
+    nothing — results would be silently empty/truncated rather than an error
+    (the overflow flag fires, but only at run time, per request).
+    """
+    if gather_cap is None:
+        return
+    if isinstance(gather_cap, bool) or not isinstance(
+            gather_cap, (int, np.integer)) or gather_cap < 1:
+        raise ValueError(
+            f"gather_cap must be a positive int or None, got {gather_cap!r}")
+
+
+def check_mesh(mesh, n_shards: int, axis_name: str) -> None:
+    """A shard_map engine's shard axis must be a mesh axis of exactly the
+    plan's shard count: each device holds one shard block (the kernels read
+    `triples[0]`), so a divisor-sized axis would silently drop shards and a
+    missing axis would break axis_index/all_gather."""
+    if axis_name not in mesh.axis_names:
+        raise ValueError(f"mesh has axes {mesh.axis_names}, engine shard "
+                         f"axis {axis_name!r} is not one of them")
+    if mesh.shape[axis_name] != n_shards:
+        raise ValueError(
+            f"mesh axis {axis_name!r} has {mesh.shape[axis_name]} devices "
+            f"but the plan has {n_shards} shards; shard_map execution "
+            "needs exactly one device per shard")
+
+
+def raise_on_overflow(overflow, query_name: str, path: str) -> None:
+    """Shared strict-mode check: one error message for every execution path
+    (vmapped / sharded / batched), so callers can match on it."""
+    if bool(np.asarray(overflow)):
+        raise CapacityOverflowError(
+            f"query {query_name!r}: static capacity overflow on the {path} "
+            "path — results are truncated; raise the plan's scan/table caps, "
+            "gather_cap, or max_per_row")
+
+
 # ---------------------------------------------------------------------------
 # shard construction
 # ---------------------------------------------------------------------------
@@ -123,9 +170,12 @@ def make_engine(plan: PhysicalPlan, *, join_impl: str = "expand",
 def run_vmapped(plan: PhysicalPlan, kg: ShardedKG,
                 params: np.ndarray | None = None, *,
                 join_impl: str = "expand", max_per_row: int = 64,
-                gather_cap: int | None = None, jit: bool = True):
+                gather_cap: int | None = None, jit: bool = True,
+                strict: bool = False):
     """Single-device simulation: vmap over the shard axis. Returns the PPN
-    device's (solutions, count, overflow)."""
+    device's (solutions, count, overflow); strict=True raises
+    CapacityOverflowError instead of returning a truncated result."""
+    check_gather_cap(gather_cap)
     engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
                          gather_cap=gather_cap)
     p = jnp.zeros((max(1, plan.n_params),), jnp.int32) if params is None \
@@ -134,18 +184,28 @@ def run_vmapped(plan: PhysicalPlan, kg: ShardedKG,
     if jit:
         fn = jax.jit(fn)
     table, tmask, overflow = fn(jnp.asarray(kg.triples), jnp.asarray(kg.valid), p)
-    return _extract(plan, table, tmask, overflow)
+    res = _extract(plan, table, tmask, overflow)
+    if strict:
+        raise_on_overflow(res[2], plan.query.name, "vmapped")
+    return res
 
 
 def run_sharded(plan: PhysicalPlan, kg: ShardedKG, mesh,
                 params: np.ndarray | None = None, *,
                 join_impl: str = "expand", max_per_row: int = 64,
-                gather_cap: int | None = None, axis: str | None = None):
-    """shard_map execution on a real mesh axis (dry-run / production)."""
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+                gather_cap: int | None = None, axis: str | None = None,
+                strict: bool = False):
+    """shard_map execution on a real mesh axis (dry-run / production).
 
+    strict=True raises CapacityOverflowError (same error type and message
+    format as run_vmapped) instead of returning a truncated result."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import shard_map_compat
+
+    check_gather_cap(gather_cap)
     axis = axis or AXIS
+    check_mesh(mesh, plan.n_shards, axis)
     engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
                          gather_cap=gather_cap, axis_name=axis)
 
@@ -153,14 +213,17 @@ def run_sharded(plan: PhysicalPlan, kg: ShardedKG, mesh,
         t, m, o = engine(triples[0], valid[0], params)
         return t[None], m[None], o[None]
 
-    fn = shard_map(kernel, mesh=mesh,
-                   in_specs=(P(axis), P(axis), P()),
-                   out_specs=(P(axis), P(axis), P(axis)))
+    fn = shard_map_compat(kernel, mesh=mesh,
+                          in_specs=(P(axis), P(axis), P()),
+                          out_specs=(P(axis), P(axis), P(axis)))
     p = jnp.zeros((max(1, plan.n_params),), jnp.int32) if params is None \
         else jnp.asarray(params, jnp.int32)
     table, tmask, overflow = jax.jit(fn)(jnp.asarray(kg.triples),
                                          jnp.asarray(kg.valid), p)
-    return _extract(plan, table, tmask, overflow)
+    res = _extract(plan, table, tmask, overflow)
+    if strict:
+        raise_on_overflow(res[2], plan.query.name, "sharded")
+    return res
 
 
 def _extract(plan: PhysicalPlan, table, tmask, overflow):
@@ -180,7 +243,8 @@ def lower_engine(plan: PhysicalPlan, kg_shape: tuple[int, int], mesh,
     """Lower (not run) the federated engine for a production mesh — used by
     the dry-run to count collective bytes per query plan."""
     from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.rules import shard_map_compat
 
     engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
                          axis_name=axis)
@@ -189,9 +253,9 @@ def lower_engine(plan: PhysicalPlan, kg_shape: tuple[int, int], mesh,
         t, m, o = engine(triples[0], valid[0], params)
         return t[None], m[None], o[None]
 
-    fn = shard_map(kernel, mesh=mesh,
-                   in_specs=(P(axis), P(axis), P()),
-                   out_specs=(P(axis), P(axis), P(axis)))
+    fn = shard_map_compat(kernel, mesh=mesh,
+                          in_specs=(P(axis), P(axis), P()),
+                          out_specs=(P(axis), P(axis), P(axis)))
     n, cap = kg_shape
     args = (jax.ShapeDtypeStruct((n, cap, 3), jnp.int32),
             jax.ShapeDtypeStruct((n, cap), jnp.bool_),

@@ -74,6 +74,15 @@ class PhysicalPlan:
         return sum(1 for s in self.steps if s.gather)
 
     @property
+    def cut_steps(self) -> tuple[int, ...]:
+        """Step indices whose pattern's owner set is not covered by the PPN —
+        the plan-level image of WawPart's partition cuts. On a real mesh each
+        is exactly one cross-shard gather site, so `len(plan.cut_steps)` is
+        the query's collective count (engine/batch.bucket_collectives lifts
+        this to buckets)."""
+        return tuple(i for i, s in enumerate(self.steps) if s.gather)
+
+    @property
     def is_local(self) -> bool:
         return self.n_gathers == 0
 

@@ -36,6 +36,15 @@ _DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
              "pred": 1}
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax versions: 0.4.x returns a list
+    with one properties-dict per program, newer jax returns the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Sum output-shape bytes of every collective op in post-SPMD HLO.
 
@@ -83,7 +92,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool) -> dict:
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 
@@ -145,13 +154,12 @@ def run_engine_rows(*, multi_pod: bool, n_shards: int | None = None) -> list:
                                    axis="model")
             compiled = lowered.compile()
             coll = collective_bytes(compiled.as_text())
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             rows.append({
                 "arch": f"kg-engine-{method}", "shape": q.name,
                 "kind": "query", "mesh": "2x16x16" if multi_pod else "16x16",
                 "n_gathers": plan.n_gathers,
-                "n_distributed_joins":
-                    sum(1 for s in plan.steps if s.gather),
+                "n_distributed_joins": len(plan.cut_steps),
                 "flops": float(cost.get("flops", 0.0)),
                 "collectives": coll,
             })

@@ -17,8 +17,9 @@ import numpy as np
 
 from repro.core.partitioner import (Partitioning, centralized_partition,
                                     random_partition, wawpart_partition)
-from repro.engine.batch import (EngineCache, assemble_batch, bucket_plans,
-                                extract_batch, shard_perms)
+from repro.engine.batch import (EngineCache, assemble_batch, bucket_collectives,
+                                bucket_plans, dedup_requests, extract_batch,
+                                extract_fanout, shard_perms)
 from repro.engine.federated import ShardedKG
 from repro.engine.planner import make_plan
 from repro.kg.generator import generate_bsbm, generate_lubm
@@ -33,13 +34,26 @@ class WorkloadServer:
     `EngineCache` is shared across buckets and, if passed in, across servers,
     so identical bucket signatures — e.g. the same workload under two
     partitionings with equal capacities — reuse one compiled program).
+
+    mesh=None serves through the vmap simulation (single device). Passing a
+    mesh whose shard axis matches the partitioning routes every bucket
+    through its shard_map engine instead: the KG tensors are placed
+    shard-resident (one block per device, sharding/rules.kg_shardings) and
+    cross-shard collectives appear only at the plan steps whose owner
+    metadata marks a partition cut (`collective_counts`).
+
+    dedup=True (default) collapses identical (template, params) requests
+    within a batch to one scanned instance, fanned back out at delivery —
+    `stats` tracks served/executed/deduped counts.
     """
 
     def __init__(self, queries, part: Partitioning, *,
                  join_impl: str = "sorted", max_per_row: int | None = None,
                  gather_cap: int | None = None,
                  params_spec: dict[str, dict] | None = None,
-                 cache: EngineCache | None = None):
+                 cache: EngineCache | None = None,
+                 mesh=None, dedup: bool = True):
+        import jax
         import jax.numpy as jnp
 
         self.part = part
@@ -48,6 +62,9 @@ class WorkloadServer:
         self.max_per_row = max_per_row
         self.gather_cap = gather_cap
         self.cache = cache if cache is not None else EngineCache()
+        self.mesh = mesh
+        self.dedup = dedup
+        self.stats = {"served": 0, "executed": 0, "deduped": 0}
 
         params_spec = params_spec or {}
         plans = [make_plan(q, part, params=params_spec.get(q.name))
@@ -57,9 +74,13 @@ class WorkloadServer:
         for bi, b in enumerate(self.buckets):
             for pi, plan in enumerate(b.plans):
                 self.route[plan.query.name] = (bi, pi)
-        self._tr = jnp.asarray(self.kg.triples)
-        self._va = jnp.asarray(self.kg.valid)
-        self._perms = jnp.asarray(shard_perms(self.kg))
+        tr, va = jnp.asarray(self.kg.triples), jnp.asarray(self.kg.valid)
+        pe = jnp.asarray(shard_perms(self.kg))
+        if mesh is not None:
+            from repro.sharding.rules import kg_shardings
+            tr, va, pe = (jax.device_put(a, s) for a, s in
+                          zip((tr, va, pe), kg_shardings(mesh)))
+        self._tr, self._va, self._perms = tr, va, pe
 
     @property
     def n_buckets(self) -> int:
@@ -69,17 +90,23 @@ class WorkloadServer:
     def n_compiles(self) -> int:
         return self.cache.misses
 
+    def collective_counts(self) -> list[int]:
+        """Per-bucket cross-shard gather sites in the compiled engines — the
+        bucket-level WawPart cut counts (0 = collective-free program)."""
+        return [bucket_collectives(b.signature) for b in self.buckets]
+
     def _engine(self, bucket):
         return self.cache.get(bucket.signature, join_impl=self.join_impl,
                               max_per_row=self.max_per_row,
-                              gather_cap=self.gather_cap)
+                              gather_cap=self.gather_cap, mesh=self.mesh)
 
     def serve(self, requests: list[tuple[str, np.ndarray | None]],
               block: bool = True):
         """Execute one batch of requests; results align with request order.
 
         Requests are grouped per bucket (one engine dispatch per bucket that
-        appears in the batch) and each result is (solutions, count, overflow).
+        appears in the batch), identical instances are collapsed (dedup), and
+        each result is (solutions, count, overflow).
         """
         import jax
 
@@ -92,19 +119,30 @@ class WorkloadServer:
         for bi, items in by_bucket.items():
             bucket = self.buckets[bi]
             reqs = [(pi, pv) for _, pi, pv in items]
+            if self.dedup:
+                unique, inverse = dedup_requests(reqs)
+            else:
+                unique, inverse = reqs, None
             # pad the batch axis to a power of two: per-bucket batch sizes
-            # vary with the stream's phase, and every new size would be a
-            # fresh jit specialization (a recompile mid-steady-state)
-            n_pad = 1 << max(0, len(reqs) - 1).bit_length()
-            reqs += [(0, None)] * (n_pad - len(reqs))
+            # vary with the stream's phase (and with how many duplicates
+            # collapsed), and every new size would be a fresh jit
+            # specialization (a recompile mid-steady-state)
+            n_pad = 1 << max(0, len(unique) - 1).bit_length()
+            padded = unique + [(0, None)] * (n_pad - len(unique))
             fn = self._engine(bucket)
-            pd, params = assemble_batch(bucket, reqs)
+            pd, params = assemble_batch(bucket, padded)
             out = fn(self._tr, self._va, self._perms, pd, params)
             if block:
                 jax.block_until_ready(out)
             # fillers sit at the tail: truncate before the host-side
             # extraction (np.unique per request) rather than after
-            extracted = extract_batch(bucket, reqs[:len(items)], *out)
+            if inverse is None:
+                extracted = extract_batch(bucket, unique, *out)
+            else:
+                extracted = extract_fanout(bucket, unique, inverse, *out)
+            self.stats["served"] += len(items)
+            self.stats["executed"] += len(unique)
+            self.stats["deduped"] += len(items) - len(unique)
             for (r, _, _), res in zip(items, extracted):
                 results[r] = res
         return results
@@ -112,6 +150,9 @@ class WorkloadServer:
     def warmup(self, requests) -> None:
         """Compile every bucket the request stream touches."""
         self.serve(requests)
+
+    def reset_stats(self) -> None:
+        self.stats = {"served": 0, "executed": 0, "deduped": 0}
 
 
 def build_dataset(dataset: str, scale: float, seed: int = 0):
@@ -150,18 +191,39 @@ def main() -> None:
                     help="ceiling on the merge-join window (0 = auto: "
                          "per-step data-sized fan-out caps; lowering it "
                          "saves compute but can trip the overflow flag)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve through shard_map on a real mesh (one device "
+                         "per shard) instead of the vmap simulation")
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="disable scan-dedup of identical batch requests")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
+
+    mesh = None
+    if args.sharded:
+        import jax
+
+        from repro.launch.mesh import make_engine_mesh
+        if len(jax.devices()) < args.n_shards:
+            ap.error(f"--sharded needs >= {args.n_shards} devices, have "
+                     f"{len(jax.devices())}; on CPU set XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={args.n_shards}")
+        mesh = make_engine_mesh(args.n_shards)
 
     store, queries = build_dataset(args.dataset, args.scale)
     t0 = time.time()
     part = build_partition(args.method, store, queries, args.n_shards)
     server = WorkloadServer(queries, part, join_impl=args.join,
-                            max_per_row=args.max_per_row or None)
+                            max_per_row=args.max_per_row or None,
+                            mesh=mesh, dedup=not args.no_dedup)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
           f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
-          f"{len(queries)} template queries in {server.n_buckets} buckets")
+          f"{len(queries)} template queries in {server.n_buckets} buckets"
+          + (f", shard_map on mesh {dict(mesh.shape)}" if mesh is not None
+             else ""))
+    print(f"  per-bucket collective counts (WawPart cuts): "
+          f"{server.collective_counts()}")
 
     stream = request_stream(queries, args.requests)
     # warm every (bucket, padded batch size) shape the stream will produce —
@@ -169,6 +231,7 @@ def main() -> None:
     for i in range(0, len(stream), args.batch):
         server.warmup(stream[i:i + args.batch])
 
+    server.reset_stats()
     t0 = time.perf_counter()
     served = 0
     n_solutions = 0
@@ -183,9 +246,11 @@ def main() -> None:
 
     print(f"served {served} requests in {dt*1e3:.1f} ms  "
           f"({served/dt:,.0f} queries/sec, batch={args.batch})")
+    st = server.stats
     print(f"  solutions={n_solutions:,}  overflows={overflows}  "
           f"compiled engines={server.n_compiles} "
-          f"(<= {server.n_buckets} buckets)")
+          f"(<= {server.n_buckets} buckets)  "
+          f"dedup: {st['executed']}/{st['served']} instances executed")
 
 
 if __name__ == "__main__":

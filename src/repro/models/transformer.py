@@ -60,6 +60,14 @@ DECODE_SHARD_MAP = None
 MOE_SHARD_MAP = None
 
 
+def _shard_map(kernel, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map (sharding/rules.py). Replication checking is
+    off: the split-softmax kernels return unreduced per-shard partials."""
+    from repro.sharding.rules import shard_map_compat
+    return shard_map_compat(kernel, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+
+
 def _spec_fits(sharding, shape) -> bool:
     mesh = sharding.mesh
     for dim, ax in zip(shape, sharding.spec):
@@ -389,11 +397,11 @@ def _decode_attn_split_kv(q, ck, cv, cur, scale):
         out = o_g / jnp.maximum(
             l_g.transpose(0, 3, 1, 2)[..., None], 1e-30).astype(o_g.dtype)
         return out.reshape(-1, 1, H, dh)
-    return jax.shard_map(
+    return _shard_map(
         kernel, mesh=mesh,
         in_specs=(P(b_ax, None, None, None), P(b_ax, t_ax, None, None),
                   P(b_ax, t_ax, None, None), P()),
-        out_specs=P(b_ax, None, None, None), check_vma=False,
+        out_specs=P(b_ax, None, None, None),
     )(q, ck, cv, jnp.asarray(cur, jnp.int32))
 
 
@@ -443,12 +451,12 @@ def _mla_decode_split_kv(cfg, q_nope, q_rope, cc, cr, wkv_b, cur):
         return out / jnp.maximum(
             l_g.transpose(0, 2, 1)[:, :, :, None], 1e-30).astype(out.dtype)
 
-    return jax.shard_map(
+    return _shard_map(
         kernel, mesh=mesh,
         in_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
                   P(b_ax, t_ax, None), P(b_ax, t_ax, None, None),
                   P(None, mdl), P()),
-        out_specs=P(b_ax, None, None, None), check_vma=False,
+        out_specs=P(b_ax, None, None, None),
     )(q_nope, q_rope, cc, cr, wkv_b, jnp.asarray(cur, jnp.int32))
 
 
@@ -636,11 +644,11 @@ def _moe_mlp_ep_shard_map(p, cfg: LMConfig, xt, gates, idx):
         # w_out (E, F@model, D@data)
         win_spec = wgate_spec = P(None, dp, mdl)
         wout_spec = P(None, mdl, dp)
-    return jax.shard_map(
+    return _shard_map(
         kernel, mesh=mesh,
         in_specs=(wgate_spec, win_spec, wout_spec,
                   P(dp, None), P(dp, None), P(dp, None)),
-        out_specs=P(dp, None), check_vma=False,
+        out_specs=P(dp, None),
     )(w_gate, p["experts"]["w_in"], p["experts"]["w_out"], xt, gates, idx)
 
 

@@ -120,6 +120,46 @@ def recsys_rules(mesh, **_kw) -> list[Rule]:
     ]
 
 
+def shard_map_compat(kernel, *, mesh, in_specs, out_specs,
+                     check_rep: bool = True):
+    """shard_map across jax versions: `jax.shard_map(check_vma=...)` arrived
+    after 0.4.x; older builds only have the experimental module with its
+    `check_rep` spelling. The single place the repo spells this out — the
+    KG engines and the transformer perf paths all route through here."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=check_rep)
+
+
+def kg_specs(axis: str = "shards") -> tuple[P, P, P, P, P]:
+    """PartitionSpecs for the federated KG engine's operands, in the bucket
+    engine's argument order: (triples, valid, perms, plan_data, params).
+
+    The three KG-resident tensors carry the shard axis as their leading dim
+    and live one-block-per-device on the mesh's shard axis; plan structure
+    (PlanData) and request params are replicated — every device scans its own
+    shard under the same plan. The same specs serve as shard_map in_specs and
+    (via `kg_shardings`) as device placement for the server's resident copy.
+    """
+    return (P(axis), P(axis), P(axis), P(), P())
+
+
+def kg_out_specs(axis: str = "shards") -> tuple[P, P, P]:
+    """shard_map out_specs for (table, mask, overflow): per-shard results
+    stacked on the shard axis."""
+    return (P(axis), P(axis), P(axis))
+
+
+def kg_shardings(mesh, axis: str = "shards"):
+    """NamedShardings to device_put the shard-resident (triples, valid,
+    perms) tensors onto a mesh, matching `kg_specs`' first three entries."""
+    from jax.sharding import NamedSharding
+    return tuple(NamedSharding(mesh, s) for s in kg_specs(axis)[:3])
+
+
 def _path_str(path) -> str:
     parts = []
     for p in path:

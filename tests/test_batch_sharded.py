@@ -1,0 +1,164 @@
+"""Distributed serving: shard_map bucket engines on a real (virtual) mesh.
+
+Differential exactness of the shard_map execution path vs the vmap
+simulation and the host oracle, the collective-count-as-cut-count invariant
+in lowered HLO, and the mesh-routed WorkloadServer — all on an 8-device
+host platform.
+
+Subprocess-based: needs 8 virtual CPU devices via XLA_FLAGS, which must not
+leak into the main test process. Mesh-independent pieces (engine/mesh
+validation) run in-process at the bottom.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT_DIFF = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.partitioner import random_partition, wawpart_partition
+from repro.engine.batch import (EngineCache, assemble_batch,
+                                bucket_collectives, bucket_plans,
+                                count_hlo_collectives, run_batched,
+                                run_sharded_batched, shard_perms)
+from repro.engine.federated import ShardedKG
+from repro.engine.oracle import evaluate_bgp
+from repro.engine.planner import make_plan
+from repro.kg.generator import generate_lubm
+from repro.kg.query import Query, TriplePattern as T, c, v
+from repro.kg.triples import TripleStore
+from repro.kg.workloads import lubm_queries
+
+def check(store, part, queries, mesh):
+    kg = ShardedKG.build(part)
+    buckets = bucket_plans([make_plan(q, part) for q in queries])
+    cache = EngineCache()
+    perms = shard_perms(kg)
+    for b in buckets:
+        rv = run_batched(b, kg, join_impl="sorted", cache=cache, perms=perms)
+        rs = run_sharded_batched(b, kg, mesh, join_impl="sorted",
+                                 cache=cache, perms=perms)
+        for (rows_v, _, ov_v), (rows_s, _, ov_s), plan in zip(rv, rs, b.plans):
+            oracle = evaluate_bgp(store, plan.query)
+            assert not ov_v and not ov_s, plan.query.name
+            assert np.array_equal(rows_v, oracle), plan.query.name
+            assert np.array_equal(rows_s, oracle), plan.query.name
+        # collective-count == cut-count invariant, in the lowered program
+        fn = cache.get(b.signature, join_impl="sorted", mesh=mesh)
+        pd, params = assemble_batch(b, [(0, None)])
+        text = fn.lower(jnp.asarray(kg.triples), jnp.asarray(kg.valid),
+                        jnp.asarray(perms), pd, params).as_text()
+        assert count_hlo_collectives(text) == \
+            2 * bucket_collectives(b.signature), b.signature
+
+# LUBM workload across partitionings and mesh sizes (3 of 8 devices, all 8)
+store = generate_lubm(1, scale=0.08, seed=0)
+qs = lubm_queries()
+for S, method in ((3, "wawpart"), (3, "random"), (8, "wawpart")):
+    part = wawpart_partition(store, qs, n_shards=S) if method == "wawpart" \
+        else random_partition(store, qs, n_shards=S, seed=0)
+    check(store, part, qs, jax.make_mesh((S,), ("shards",)))
+
+# randomized BGPs on a 2-shard mesh
+terms = [f"e{i}" for i in range(12)]
+preds = [f"p{i}" for i in range(3)]
+for trial in range(3):
+    r = np.random.default_rng(trial)
+    triples = [(terms[r.integers(12)], preds[r.integers(3)],
+                terms[r.integers(12)]) for _ in range(40)]
+    st = TripleStore.from_string_triples(triples)
+    vars_ = [v("X"), v("Y"), v("Z")]
+    queries = []
+    for qi in range(3):
+        pats = []
+        for _ in range(int(r.integers(1, 4))):
+            s = vars_[r.integers(2)] if r.random() < 0.8 \
+                else c(terms[r.integers(2)])
+            o = vars_[r.integers(3)] if r.random() < 0.7 \
+                else c(terms[r.integers(2)])
+            pats.append(T(s, c(preds[r.integers(3)]), o))
+        queries.append(Query(f"RQ{trial}_{qi}", tuple(pats)))
+    part = random_partition(st, queries, n_shards=2, seed=trial)
+    check(st, part, queries, jax.make_mesh((2,), ("shards",)))
+print("BATCH_SHARD_MAP_OK")
+"""
+
+SCRIPT_SERVER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.launch.mesh import make_engine_mesh
+from repro.launch.serve import (WorkloadServer, build_dataset,
+                                build_partition, request_stream)
+
+store, queries = build_dataset("lubm", 0.08)
+part = build_partition("wawpart", store, queries, 3)
+stream = request_stream(queries, 32)
+base = WorkloadServer(queries, part)
+sm = WorkloadServer(queries, part, mesh=make_engine_mesh(3))
+res_b = base.serve(stream)
+res_s = sm.serve(stream)
+for (a, na, ova), (b, nb, ovb) in zip(res_b, res_s):
+    assert na == nb and ova == ovb
+    assert np.array_equal(a, b)
+assert any(c > 0 for c in sm.collective_counts())   # cuts exist => gathers
+# dedup engaged on both paths: 32 round-robin requests over 14 templates
+assert sm.stats["executed"] == 14 and sm.stats["served"] == 32
+# strict mode surfaces overflow identically through the sharded path
+from repro.engine.batch import bucket_plans, run_sharded_batched
+from repro.engine.federated import CapacityOverflowError
+from repro.engine.planner import make_plan
+plan = make_plan(queries[0], part)
+squeezed = make_plan(queries[0], part,
+                     capacities=([2] * len(plan.steps), plan.table_cap))
+(b_,) = bucket_plans([squeezed])
+from repro.engine.federated import ShardedKG
+kg = ShardedKG.build(part)
+try:
+    run_sharded_batched(b_, kg, make_engine_mesh(3), strict=True)
+    raise SystemExit("strict sharded run did not raise on overflow")
+except CapacityOverflowError as e:
+    assert "sharded" in str(e) and "overflow" in str(e)
+print("SERVER_SHARD_MAP_OK")
+"""
+
+
+@pytest.mark.parametrize("script,token", [
+    (SCRIPT_DIFF, "BATCH_SHARD_MAP_OK"),
+    (SCRIPT_SERVER, "SERVER_SHARD_MAP_OK"),
+])
+def test_batch_shard_map(script, token):
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=560,
+                         cwd=REPO)
+    assert token in out.stdout, out.stdout[-1500:] + out.stderr[-1500:]
+
+
+# ---------------------------------------------------------------------------
+# mesh/engine validation: runs on the single real CPU device
+# ---------------------------------------------------------------------------
+
+def test_mesh_validation_rejects_bad_axes(lubm_small):
+    import jax
+
+    from repro.core.partitioner import wawpart_partition
+    from repro.engine.batch import bucket_plans, make_sharded_batched_engine
+    from repro.engine.planner import make_plan
+    from repro.kg.workloads import lubm_queries
+
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    sig = bucket_plans([make_plan(qs[0], part)])[0].signature
+    one = jax.make_mesh((1,), ("shards",))
+    with pytest.raises(ValueError, match="one device per shard"):
+        make_sharded_batched_engine(sig, one)
+    data = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="shard axis"):
+        make_sharded_batched_engine(sig, data)

@@ -5,8 +5,8 @@ import pytest
 
 from repro.core.partitioner import (centralized_partition, random_partition,
                                     wawpart_partition)
-from repro.engine.batch import (EngineCache, bucket_plans, run_batched,
-                                shard_perms)
+from repro.engine.batch import (EngineCache, bucket_plans, dedup_requests,
+                                run_batched, shard_perms)
 from repro.engine.federated import ShardedKG, run_vmapped
 from repro.engine.oracle import evaluate_bgp
 from repro.engine.planner import make_plan, pad_plan
@@ -127,6 +127,8 @@ def test_padded_noop_steps_are_identity(lubm_small):
 
 
 def test_bucketing_invariants(lubm_small):
+    from repro.engine.batch import bucket_collectives
+
     qs = lubm_queries()
     part = wawpart_partition(lubm_small, qs, n_shards=3)
     plans = [make_plan(q, part) for q in qs]
@@ -135,6 +137,12 @@ def test_bucketing_invariants(lubm_small):
     assert len(buckets) < len(plans)     # bucketing actually groups
     for b in buckets:
         sig = b.signature
+        # the bucket's gather sites cover every member's cuts and add none
+        # beyond some member's: collective count == lifted WawPart cut count
+        assert bucket_collectives(sig) >= max(
+            len(p.cut_steps) for p in b.plans)
+        assert all(any(i in p.cut_steps for p in b.plans)
+                   for i, g in enumerate(sig.gather_bits) if g)
         for p in b.plans:
             assert len(p.steps) == sig.n_steps
             assert p.table_cap == sig.table_cap
@@ -181,6 +189,69 @@ def test_edge_queries_batched(impl):
         kg = ShardedKG.build(part)
         for b in bucket_plans([make_plan(q, part) for q in qs]):
             _check_bucket(store, kg, b, impl, EngineCache(), max_per_row=32)
+
+
+def test_scan_dedup_requests_collapse_and_fan_out(lubm_small):
+    """Duplicated (plan, params) requests collapse to one scanned instance;
+    the fanned-out results are identical to the naive batch."""
+    qs = lubm_queries()
+    d = lubm_small.dictionary
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    template = qs[12]
+    plan = make_plan(template, part, params={(1, 2): 0}, cap_margin=4.0)
+    (bucket,) = bucket_plans([plan])
+    unis = [t for t in (f"ub:University{i}" for i in range(3)) if t in d]
+    pvs = [np.asarray([d.id_of(u)], np.int32) for u in unis]
+    # heavy duplication: every instance appears 4x, interleaved
+    requests = [(0, pv) for _ in range(4) for pv in pvs] + [(0, None)] * 3
+    unique, inverse = dedup_requests(requests)
+    assert len(unique) == len(unis) + 1          # + the params=None instance
+    for (idx, pv), j in zip(requests, inverse):  # inverse maps back exactly
+        uidx, upv = unique[j]
+        assert uidx == idx
+        assert (pv is None and upv is None) or np.array_equal(upv, pv)
+    naive = run_batched(bucket, kg, requests, join_impl="sorted")
+    deduped = run_batched(bucket, kg, requests, join_impl="sorted",
+                          dedup=True)
+    for (ra, na, ova), (rb, nb, ovb) in zip(naive, deduped):
+        assert na == nb and ova == ovb
+        assert np.array_equal(ra, rb)
+
+
+def test_server_scan_dedup_stats_and_equality(lubm_small):
+    """WorkloadServer with dedup executes fewer instances than it serves and
+    returns exactly the no-dedup results."""
+    from repro.launch.serve import WorkloadServer
+
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    stream = [(qs[i % 4].name, None) for i in range(24)]   # 4 templates, 24 reqs
+    plain = WorkloadServer(qs, part, dedup=False)
+    dedup = WorkloadServer(qs, part, dedup=True)
+    res_p = plain.serve(stream)
+    res_d = dedup.serve(stream)
+    for (ra, na, ova), (rb, nb, ovb) in zip(res_p, res_d):
+        assert na == nb and ova == ovb
+        assert np.array_equal(ra, rb)
+    assert plain.stats["executed"] == plain.stats["served"] == 24
+    assert dedup.stats["served"] == 24
+    assert dedup.stats["executed"] == 4                  # one per template
+    assert dedup.stats["deduped"] == 20
+
+
+def test_run_batched_strict_raises_on_overflow(lubm_small):
+    from repro.engine.federated import CapacityOverflowError
+
+    qs = [Query("ALL", (T(v("X"), c("rdf:type"), v("Y")),))]
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    ref = make_plan(qs[0], part)
+    squeezed = make_plan(qs[0], part,
+                         capacities=([s.scan_cap for s in ref.steps], 8))
+    (bucket,) = bucket_plans([squeezed])
+    with pytest.raises(CapacityOverflowError, match="vmapped"):
+        run_batched(bucket, kg, strict=True)
 
 
 def test_shard_perms_sorted_views(lubm_small):

@@ -4,8 +4,10 @@ import numpy as np
 import pytest
 
 from repro.core.features import build_unit_catalog
-from repro.core.partitioner import Partitioning, wawpart_partition
-from repro.engine.federated import ShardedKG, run_vmapped
+from repro.core.partitioner import (Partitioning, centralized_partition,
+                                    wawpart_partition)
+from repro.engine.federated import (CapacityOverflowError, ShardedKG,
+                                    run_sharded, run_vmapped)
 from repro.engine.oracle import evaluate_bgp
 from repro.engine.planner import make_plan
 from repro.kg.query import Query, TriplePattern as T, c, v
@@ -79,6 +81,68 @@ def test_scan_cap_overflow_propagates(tiny):
     assert ovf
     # generous caps: no overflow, oracle-exact
     rows, _, ovf = run_vmapped(ref, kg)
+    assert not ovf and np.array_equal(rows, evaluate_bgp(store, q))
+
+
+def test_gather_cap_validated_identically_on_both_paths(tiny):
+    """run_vmapped and run_sharded reject an invalid gather_cap with the same
+    ValueError, before any tracing or device work (a dummy mesh suffices)."""
+    store, q, part = tiny
+    kg = ShardedKG.build(part)
+    plan = _gather_plan(store, q, part)
+    for bad in (0, -3, 2.5, True):
+        with pytest.raises(ValueError, match="gather_cap must be a positive"):
+            run_vmapped(plan, kg, gather_cap=bad)
+        with pytest.raises(ValueError, match="gather_cap must be a positive"):
+            run_sharded(plan, kg, object(), gather_cap=bad)
+
+
+def test_strict_overflow_raises_with_consistent_message(tiny):
+    """strict=True turns the overflow flag into a CapacityOverflowError whose
+    message carries the query name on every path (vmapped here; the sharded
+    path is covered on a real mesh in test_batch_sharded.py)."""
+    store, q, part = tiny
+    kg = ShardedKG.build(part)
+    plan = _gather_plan(store, q, part)
+    with pytest.raises(CapacityOverflowError,
+                       match="'GQ'.*vmapped.*truncated"):
+        run_vmapped(plan, kg, gather_cap=1, strict=True)
+    # non-overflowing strict run: no error, oracle-exact
+    rows, _, ovf = run_vmapped(plan, kg, strict=True)
+    assert not ovf and np.array_equal(rows, evaluate_bgp(store, q))
+
+
+def test_run_sharded_rejects_mismatched_mesh(tiny):
+    """A mesh whose shard axis is smaller than the plan's shard count would
+    silently drop shards (each device holds one block): run_sharded must
+    refuse it up front."""
+    import jax
+
+    store, q, part = tiny                 # 2 shards
+    kg = ShardedKG.build(part)
+    plan = make_plan(q, part)
+    one = jax.make_mesh((1,), ("shards",))
+    with pytest.raises(ValueError, match="one device per shard"):
+        run_sharded(plan, kg, one)
+    data = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="shard axis"):
+        run_sharded(plan, kg, data)
+
+
+def test_strict_sharded_single_shard_mesh(tiny):
+    """A 1-shard centralized plan runs under shard_map on the single real
+    CPU device: strict overflow behavior matches the vmapped path."""
+    import jax
+
+    store, q, part = tiny
+    cpart = centralized_partition(store, [q])
+    kg = ShardedKG.build(cpart)
+    plan = make_plan(q, cpart)
+    mesh = jax.make_mesh((1,), ("shards",))
+    squeezed = make_plan(q, cpart, capacities=([2], plan.table_cap))
+    with pytest.raises(CapacityOverflowError, match="'GQ'.*sharded"):
+        run_sharded(squeezed, kg, mesh, strict=True)
+    rows, _, ovf = run_sharded(plan, kg, mesh, strict=True)
     assert not ovf and np.array_equal(rows, evaluate_bgp(store, q))
 
 
