@@ -169,6 +169,9 @@ def main(argv: list[str] | None = None) -> None:
                          "1 timing iteration")
     ap.add_argument("--no-sharded", action="store_true",
                     help="skip the shard_map-on-mesh section")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full result dict as JSON "
+                         "(BENCH_serve.json: the cross-PR perf trajectory)")
     args = ap.parse_args(argv)
 
     sharded = not args.no_sharded
@@ -183,6 +186,12 @@ def main(argv: list[str] | None = None) -> None:
                   methods=("wawpart",), sharded=sharded)
     else:
         res = run(sharded=sharded)
+
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"serve/json,0,wrote_{args.json}", file=sys.stderr)
 
     res.pop("_meta")
     for method, rows in res.items():

@@ -7,7 +7,12 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   §4.1   shard balance
   §3.2   distributed-join counts + traffic (the objective)
   §Serve batched workload-serving throughput (beyond-paper)
+  §Adapt adaptive vs static serving under workload drift (beyond-paper)
   §Roofline (if results/dryrun.jsonl exists)
+
+The serving and adaptive sections also write machine-readable
+``BENCH_serve.json`` / ``BENCH_adaptive.json`` next to the CSV stream, so
+the perf trajectory is tracked (and diffable) across PRs.
 
 ``--dry-run`` imports every bench section and checks its entry point without
 executing any measurement — a fast CI rot-guard for the harness itself.
@@ -19,7 +24,7 @@ import os
 import sys
 
 SECTIONS = ("bench_joins", "bench_balance", "bench_lubm", "bench_bsbm",
-            "bench_averages", "bench_serve_throughput")
+            "bench_averages", "bench_serve_throughput", "bench_adaptive")
 
 
 def dry_run() -> None:
@@ -50,15 +55,17 @@ def main() -> None:
         os.environ.setdefault(
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-    from benchmarks import (bench_averages, bench_balance, bench_bsbm,
-                            bench_joins, bench_lubm, bench_serve_throughput)
+    from benchmarks import (bench_adaptive, bench_averages, bench_balance,
+                            bench_bsbm, bench_joins, bench_lubm,
+                            bench_serve_throughput)
     print("name,us_per_call,derived")
     bench_joins.main()
     bench_balance.main()
     bench_lubm.main()
     bench_bsbm.main()
     bench_averages.main()
-    bench_serve_throughput.main([])
+    bench_serve_throughput.main(["--json", "BENCH_serve.json"])
+    bench_adaptive.main(["--json", "BENCH_adaptive.json"])
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline
         roofline.main()

@@ -1,0 +1,32 @@
+"""Adaptive repartitioning: live workload tracking, drift detection, and
+budget-bounded shard migration (beyond the paper; AWAPart / Harbi et al.
+direction).
+
+WawPart computes a partitioning once from a fixed workload. The serving
+stack observes real request streams whose template mix drifts; this package
+closes the loop:
+
+  stats.py        WorkloadTracker — sliding-window per-template frequencies,
+                  observed cut-join counts, per-shard load from serve() calls
+  drift.py        DriftDetector — frequency-divergence threshold + unseen-
+                  template triggers, graded none/incremental/full
+  repartition.py  incremental greedy unit moves under a migration budget
+                  (frequency-weighted _unit_move_delta), full wawpart re-run
+                  fallback for large drift
+  migrate.py      MigrationPlan — per-shard triple deltas applied to the
+                  ShardedKG, epoch bump, minimal plan re-rewrites
+  controller.py   AdaptiveController — glues the above into WorkloadServer
+"""
+from repro.adaptive.controller import AdaptiveConfig, AdaptiveController
+from repro.adaptive.drift import DriftDetector, DriftReport
+from repro.adaptive.migrate import MigrationPlan
+from repro.adaptive.repartition import (RepartitionResult,
+                                        full_repartition,
+                                        incremental_repartition)
+from repro.adaptive.stats import WorkloadSnapshot, WorkloadTracker
+
+__all__ = [
+    "AdaptiveConfig", "AdaptiveController", "DriftDetector", "DriftReport",
+    "MigrationPlan", "RepartitionResult", "WorkloadSnapshot",
+    "WorkloadTracker", "full_repartition", "incremental_repartition",
+]

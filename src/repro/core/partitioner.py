@@ -30,6 +30,14 @@ from repro.kg.triples import TripleStore
 DEFAULT_WEIGHTS = {f"w{i}": 1.0 for i in range(1, 8)}
 
 
+def _qw(query_weights: dict[str, float] | None, q: Query) -> float:
+    """Observed workload weight of a query (paper's q terms). None = the
+    paper's uniform workload, every query counting 1."""
+    if query_weights is None:
+        return 1.0
+    return float(query_weights.get(q.name, 0.0))
+
+
 @dataclass
 class Partitioning:
     n_shards: int
@@ -45,6 +53,17 @@ class Partitioning:
             units = tuple(u for u in self.unit_shard if u.p == f.p
                           and (f.kind == "P" or u.o in (f.o, None)))
         return frozenset(self.unit_shard[u] for u in units if u in self.unit_shard)
+
+    def routing_units(self, f: Feature) -> tuple[DataUnit, ...]:
+        """Units a pattern with feature f can touch under this placement —
+        the planner's shard-routing resolution, with the outside-workload
+        fallback (every placed unit of the predicate). One definition, so
+        the plan builder and the migration's changed-plan check can never
+        disagree about which unit moves affect a query."""
+        units = self.catalog.feature_units.get(f)
+        if units is None:
+            units = tuple(u for u in self.unit_shard if u.p == f.p)
+        return units
 
     def assign_triples(self) -> np.ndarray:
         """Shard id per triple row (every triple exactly once — no replication)."""
@@ -91,7 +110,9 @@ def _local_join_edges(q: Query, cat: UnitCatalog,
 
 def score_replicated_feature(r: Feature, g: int, groups: dict[int, set[Feature]],
                              queries: list[Query], cat: UnitCatalog,
-                             weights: dict[str, float]) -> float:
+                             weights: dict[str, float],
+                             query_weights: dict[str, float] | None = None,
+                             ) -> float:
     qfeats = {q.name: query_features(q) for q in queries}
     group_feats = groups[g]
     # peers: features co-occurring with r in some query, present in group g
@@ -99,9 +120,11 @@ def score_replicated_feature(r: Feature, g: int, groups: dict[int, set[Feature]]
                for f in qfeats[q.name] if f != r and f in group_feats}
     peers_t = {f for q in queries if r in qfeats[q.name]
                for f in qfeats[q.name] if f != r}
-    q_c = sum(1 for q in queries if r in qfeats[q.name]
+    # q terms: observed query frequencies when a live workload is tracked,
+    # the paper's uniform 1-per-query otherwise
+    q_c = sum(_qw(query_weights, q) for q in queries if r in qfeats[q.name]
               and qfeats[q.name] & group_feats != set())
-    q_t = sum(1 for q in queries if r in qfeats[q.name])
+    q_t = sum(_qw(query_weights, q) for q in queries if r in qfeats[q.name])
     r_size = sum(cat.sizes.get(u, 0) for u in cat.feature_units.get(r, ()))
     g_size = sum(cat.sizes.get(u, 0) for f in group_feats
                  for u in cat.feature_units.get(f, ()))
@@ -109,8 +132,9 @@ def score_replicated_feature(r: Feature, g: int, groups: dict[int, set[Feature]]
     s_c = r_size / max(1, g_size)
     s_t = r_size / t_size
 
-    # D_OR: join edges of workload queries that become local when r sits with g
-    d_or = 0
+    # D_OR: join edges of workload queries that become local when r sits with
+    # g, each weighted by how often its query is actually asked
+    d_or = 0.0
     for q in queries:
         if r not in qfeats[q.name]:
             continue
@@ -120,7 +144,7 @@ def score_replicated_feature(r: Feature, g: int, groups: dict[int, set[Feature]]
         for i, j, _k in q.join_edges():
             us = pu[i] | pu[j]
             if us & r_units and us <= (g_units | r_units):
-                d_or += 1
+                d_or += _qw(query_weights, q)
 
     w = weights
     s_r = (len(peers_c) * w["w1"] + q_c * w["w2"] + s_c * w["w3"]
@@ -141,13 +165,15 @@ def _groups_from_labels(labels: np.ndarray, queries: list[Query],
 
 
 def _resolve_replicated(groups: dict[int, set[Feature]], queries: list[Query],
-                        cat: UnitCatalog, weights: dict[str, float]) -> None:
+                        cat: UnitCatalog, weights: dict[str, float],
+                        query_weights: dict[str, float] | None = None) -> None:
     claimed: dict[Feature, list[int]] = {}
     for g, gf in groups.items():
         for f in gf:
             claimed.setdefault(f, []).append(g)
     for f, gs in sorted((f, gs) for f, gs in claimed.items() if len(gs) > 1):
-        scores = {g: score_replicated_feature(f, g, groups, queries, cat, weights)
+        scores = {g: score_replicated_feature(f, g, groups, queries, cat,
+                                              weights, query_weights)
                   for g in gs}
         keep = max(sorted(scores), key=lambda g: scores[g])
         for g in gs:
@@ -213,10 +239,16 @@ def _split_oversized(units: list[DataUnit], cat: UnitCatalog,
 
 
 def _placement_cost(queries: list[Query], cat: UnitCatalog,
-                    unit_of: dict[DataUnit, int]) -> float:
-    """Workload-wide estimated distributed-join traffic (the paper's objective)."""
+                    unit_of: dict[DataUnit, int],
+                    query_weights: dict[str, float] | None = None) -> float:
+    """Workload-wide estimated distributed-join traffic (the paper's
+    objective). With query_weights, each query's traffic is scaled by its
+    observed frequency — the objective the adaptive repartitioner descends."""
     cost = 0.0
     for q in queries:
+        w_q = _qw(query_weights, q)
+        if w_q == 0.0:
+            continue
         pu = dict(_query_units(q, cat))
         for i, j, _k in q.join_edges():
             shards = {unit_of.get(x, -1) for x in pu[i] | pu[j]}
@@ -224,7 +256,7 @@ def _placement_cost(queries: list[Query], cat: UnitCatalog,
                 continue
             side_i = sum(cat.sizes.get(x, 0) for x in pu[i])
             side_j = sum(cat.sizes.get(x, 0) for x in pu[j])
-            cost += float(max(1, min(side_i, side_j)))
+            cost += w_q * float(max(1, min(side_i, side_j)))
     return cost
 
 
@@ -233,12 +265,19 @@ def wawpart_partition(store: TripleStore, queries: list[Query], *,
                       cut_distance: float | None = None,
                       weights: dict[str, float] | None = None,
                       dist_matrix: np.ndarray | None = None,
-                      balance_tol: float = 0.15) -> Partitioning:
+                      balance_tol: float = 0.15,
+                      query_weights: dict[str, float] | None = None,
+                      ) -> Partitioning:
     """Algorithm 2. The dendrogram cut produces m >= n_shards feature groups;
     replicated features are resolved by score; groups are packed into shards;
     unused features balance the result. When cut_distance is None, the cut
     level is auto-selected by the paper's own objective: minimum estimated
     distributed-join traffic subject to shard balance within tolerance.
+
+    query_weights ({query name: observed frequency}) makes the statistics
+    module and the objective workload-aware in magnitude, not just shape —
+    the adaptive subsystem passes tracked counts here; None keeps the
+    paper's uniform one-count-per-query workload.
     """
     weights = {**DEFAULT_WEIGHTS, **(weights or {})}
     cat = build_unit_catalog(store, queries)
@@ -256,10 +295,11 @@ def wawpart_partition(store: TripleStore, queries: list[Query], *,
     best = None
     for labels in candidate_labels:
         groups = _groups_from_labels(labels, queries)
-        _resolve_replicated(groups, queries, cat, weights)
+        _resolve_replicated(groups, queries, cat, weights, query_weights)
         unit_shard, sizes = _place_groups(groups, n_shards, cat)
-        _rebalance(queries, cat, unit_shard, sizes, tol=balance_tol)
-        traffic = _placement_cost(queries, cat, unit_shard)
+        _rebalance(queries, cat, unit_shard, sizes, tol=balance_tol,
+                   query_weights=query_weights)
+        traffic = _placement_cost(queries, cat, unit_shard, query_weights)
         mean = sizes.sum() / max(1, n_shards)
         imbalance = float(np.abs(sizes - mean).max() / max(mean, 1.0))
         key = (imbalance > balance_tol + 1e-9, traffic, imbalance)
@@ -269,19 +309,25 @@ def wawpart_partition(store: TripleStore, queries: list[Query], *,
     _key, labels, unit_shard, sizes = best
     return Partitioning(n_shards, unit_shard, cat, sizes, method="wawpart",
                         meta={"linkage": linkage, "labels": labels.tolist(),
-                              "z": z.tolist(), "weights": weights})
+                              "z": z.tolist(), "weights": weights,
+                              "query_weights": dict(query_weights or {})})
 
 
 def _unit_move_delta(u: DataUnit, dst: int, queries: list[Query],
-                     cat: UnitCatalog, unit_of: dict[DataUnit, int]) -> float:
+                     cat: UnitCatalog, unit_of: dict[DataUnit, int],
+                     query_weights: dict[str, float] | None = None) -> float:
     """Change in estimated distributed-join traffic if unit u moves to dst.
 
     A join edge's traffic weight is the smaller side's data size (what a
-    federated SERVICE would ship). Negative delta = the move restores
-    locality somewhere.
+    federated SERVICE would ship), scaled by the query's observed frequency
+    when query_weights is given. Negative delta = the move restores locality
+    somewhere the workload actually goes.
     """
     delta = 0.0
     for q in queries:
+        w_q = _qw(query_weights, q)
+        if w_q == 0.0:
+            continue
         pu = dict(_query_units(q, cat))
         for i, j, _k in q.join_edges():
             us = pu[i] | pu[j]
@@ -295,14 +341,15 @@ def _unit_move_delta(u: DataUnit, dst: int, queries: list[Query],
                 continue
             side_i = sum(cat.sizes.get(x, 0) for x in pu[i])
             side_j = sum(cat.sizes.get(x, 0) for x in pu[j])
-            w = float(max(1, min(side_i, side_j)))
+            w = w_q * float(max(1, min(side_i, side_j)))
             delta += w if was_local else -w
     return delta
 
 
 def _rebalance(queries: list[Query], cat: UnitCatalog,
                unit_shard: dict[DataUnit, int], sizes: np.ndarray,
-               *, tol: float = 0.15, max_moves: int = 512) -> None:
+               *, tol: float = 0.15, max_moves: int = 512,
+               query_weights: dict[str, float] | None = None) -> None:
     n_shards = sizes.shape[0]
     if n_shards < 2:
         return
@@ -323,7 +370,8 @@ def _rebalance(queries: list[Query], cat: UnitCatalog,
             cands = [min(cands, key=lambda x: cat.sizes[x])]
         # cheapest traffic delta first; among near-free moves prefer the one
         # that best fills the deficit
-        deltas = {u: _unit_move_delta(u, dst, queries, cat, unit_shard)
+        deltas = {u: _unit_move_delta(u, dst, queries, cat, unit_shard,
+                                      query_weights)
                   for u in cands}
         dmin = min(deltas.values())
         near = [u for u in cands if deltas[u] <= dmin + 1e-9] or cands
@@ -356,15 +404,25 @@ def centralized_partition(store: TripleStore, queries: list[Query]) -> Partition
     return Partitioning(1, unit_shard, cat, sizes, method="centralized")
 
 
-def workload_join_stats(queries: list[Query], part: Partitioning) -> dict:
-    """Workload-level local/distributed join counts + traffic under a placement."""
+def workload_join_stats(queries: list[Query], part: Partitioning,
+                        query_weights: dict[str, float] | None = None) -> dict:
+    """Workload-level local/distributed join counts + traffic under a
+    placement. With query_weights, weighted_local/weighted_distributed scale
+    each query's edge counts by its observed frequency — the cut-join rate a
+    serving stream with that template mix would actually pay."""
     local = dist = 0
+    w_local = w_dist = 0.0
     per_query = {}
     for q in queries:
         l, dd = _local_join_edges(q, part.catalog, part.unit_shard)
         local += l
         dist += dd
+        w_q = _qw(query_weights, q)
+        w_local += w_q * l
+        w_dist += w_q * dd
         per_query[q.name] = {"local": l, "distributed": dd}
-    traffic = _placement_cost(queries, part.catalog, part.unit_shard)
+    traffic = _placement_cost(queries, part.catalog, part.unit_shard,
+                              query_weights)
     return {"local": local, "distributed": dist, "traffic": traffic,
+            "weighted_local": w_local, "weighted_distributed": w_dist,
             "per_query": per_query}

@@ -147,10 +147,7 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
     # ---- shard routing (the paper's rewriter) --------------------------
     homes: list[frozenset[int]] = []
     for pat in q.patterns:
-        f = pattern_feature(pat)
-        units = part.catalog.feature_units.get(f)
-        if units is None:
-            units = tuple(u for u in part.unit_shard if u.p == f.p)
+        units = part.routing_units(pattern_feature(pat))
         homes.append(frozenset(part.unit_shard[u] for u in units
                                if u in part.unit_shard))
     counts = [0] * part.n_shards

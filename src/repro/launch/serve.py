@@ -7,14 +7,23 @@ Builds the dataset, partitions it for its published workload, buckets the
 query plans by shape (see engine/batch.py), compiles one engine per bucket,
 and serves the request stream batch-by-batch, reporting throughput
 (queries/sec) and the compile count per partitioning method.
+
+--adaptive closes the loop (repro.adaptive): the server tracks the live
+template mix, detects drift against the mix the partitioning was computed
+from, and migrates shards under a triple-movement budget between batches —
+pair it with --drift, which serves a two-phase stream whose template mix
+shifts halfway through.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from contextlib import contextmanager
+from typing import NamedTuple
 
 import numpy as np
 
+from repro.core.features import pattern_feature
 from repro.core.partitioner import (Partitioning, centralized_partition,
                                     random_partition, wawpart_partition)
 from repro.engine.batch import (EngineCache, assemble_batch, bucket_collectives,
@@ -24,6 +33,22 @@ from repro.engine.federated import ShardedKG
 from repro.engine.planner import make_plan
 from repro.kg.generator import generate_bsbm, generate_lubm
 from repro.kg.workloads import bsbm_queries, lubm_queries
+
+
+class _ServingState(NamedTuple):
+    """One partitioning epoch's immutable serving artifacts. serve() binds
+    the state once per batch, so a migration swapping the server's state
+    never changes tensors under an in-flight batch — it finishes against
+    the epoch it started on."""
+    epoch: int
+    part: Partitioning
+    kg: ShardedKG
+    plans: dict                       # template name -> unpadded PhysicalPlan
+    buckets: list
+    route: dict                       # template name -> (bucket, idx)
+    tr: object
+    va: object
+    perms: object
 
 
 class WorkloadServer:
@@ -45,6 +70,12 @@ class WorkloadServer:
     dedup=True (default) collapses identical (template, params) requests
     within a batch to one scanned instance, fanned back out at delivery —
     `stats` tracks served/executed/deduped counts.
+
+    adaptive=True (or an AdaptiveConfig) attaches an AdaptiveController
+    (repro.adaptive): every routed request feeds a sliding-window workload
+    tracker, drift checks run between batches, and a detected drift
+    triggers a budgeted incremental repartition (or a full re-run on large
+    drift) applied through `migrate()`. `epoch` counts applied migrations.
     """
 
     def __init__(self, queries, part: Partitioning, *,
@@ -52,12 +83,8 @@ class WorkloadServer:
                  gather_cap: int | None = None,
                  params_spec: dict[str, dict] | None = None,
                  cache: EngineCache | None = None,
-                 mesh=None, dedup: bool = True):
-        import jax
-        import jax.numpy as jnp
-
-        self.part = part
-        self.kg = ShardedKG.build(part)
+                 mesh=None, dedup: bool = True, adaptive=None):
+        self.queries = list(queries)
         self.join_impl = join_impl
         self.max_per_row = max_per_row
         self.gather_cap = gather_cap
@@ -65,26 +92,65 @@ class WorkloadServer:
         self.mesh = mesh
         self.dedup = dedup
         self.stats = {"served": 0, "executed": 0, "deduped": 0}
+        self.params_spec = params_spec or {}
+        self._track = True
 
-        params_spec = params_spec or {}
-        plans = [make_plan(q, part, params=params_spec.get(q.name))
-                 for q in queries]
-        self.buckets = bucket_plans(plans)
-        self.route: dict[str, tuple[int, int]] = {}   # name -> (bucket, idx)
-        for bi, b in enumerate(self.buckets):
+        plans = {q.name: make_plan(q, part,
+                                   params=self.params_spec.get(q.name))
+                 for q in self.queries}
+        self._state = self._build_state(0, part, ShardedKG.build(part), plans)
+
+        self.adaptive = None
+        if adaptive is not None and adaptive is not False:
+            from repro.adaptive.controller import (AdaptiveConfig,
+                                                   AdaptiveController)
+            cfg = adaptive if isinstance(adaptive, AdaptiveConfig) else None
+            self.adaptive = AdaptiveController(self, cfg)
+
+    # ---- state ---------------------------------------------------------
+
+    def _build_state(self, epoch: int, part: Partitioning, kg: ShardedKG,
+                     plans: dict) -> _ServingState:
+        import jax
+        import jax.numpy as jnp
+
+        buckets = bucket_plans([plans[q.name] for q in self.queries])
+        route: dict[str, tuple[int, int]] = {}
+        for bi, b in enumerate(buckets):
             for pi, plan in enumerate(b.plans):
-                self.route[plan.query.name] = (bi, pi)
-        tr, va = jnp.asarray(self.kg.triples), jnp.asarray(self.kg.valid)
-        pe = jnp.asarray(shard_perms(self.kg))
-        if mesh is not None:
+                route[plan.query.name] = (bi, pi)
+        tr, va = jnp.asarray(kg.triples), jnp.asarray(kg.valid)
+        pe = jnp.asarray(shard_perms(kg))
+        if self.mesh is not None:
             from repro.sharding.rules import kg_shardings
             tr, va, pe = (jax.device_put(a, s) for a, s in
-                          zip((tr, va, pe), kg_shardings(mesh)))
-        self._tr, self._va, self._perms = tr, va, pe
+                          zip((tr, va, pe), kg_shardings(self.mesh)))
+        return _ServingState(epoch, part, kg, plans, buckets, route,
+                             tr, va, pe)
+
+    @property
+    def part(self) -> Partitioning:
+        return self._state.part
+
+    @property
+    def kg(self) -> ShardedKG:
+        return self._state.kg
+
+    @property
+    def buckets(self) -> list:
+        return self._state.buckets
+
+    @property
+    def route(self) -> dict:
+        return self._state.route
+
+    @property
+    def epoch(self) -> int:
+        return self._state.epoch
 
     @property
     def n_buckets(self) -> int:
-        return len(self.buckets)
+        return len(self._state.buckets)
 
     @property
     def n_compiles(self) -> int:
@@ -93,12 +159,77 @@ class WorkloadServer:
     def collective_counts(self) -> list[int]:
         """Per-bucket cross-shard gather sites in the compiled engines — the
         bucket-level WawPart cut counts (0 = collective-free program)."""
-        return [bucket_collectives(b.signature) for b in self.buckets]
+        return [bucket_collectives(b.signature) for b in self._state.buckets]
 
-    def _engine(self, bucket):
-        return self.cache.get(bucket.signature, join_impl=self.join_impl,
-                              max_per_row=self.max_per_row,
-                              gather_cap=self.gather_cap, mesh=self.mesh)
+    # ---- migration -----------------------------------------------------
+
+    def _query_units(self, q, part: Partitioning) -> set:
+        """Every data unit a query's patterns can touch under a placement —
+        the same resolution make_plan routes through (routing_units)."""
+        units: set = set()
+        for pat in q.patterns:
+            units.update(part.routing_units(pattern_feature(pat)))
+        return units
+
+    def migrate(self, new_part: Partitioning) -> dict:
+        """Swap the server onto a new placement of the same store.
+
+        Sequencing per the migration contract:
+          1. per-shard triple deltas applied to the ShardedKG (block
+             capacity kept when the new shards still fit, so engines keep
+             their input shapes);
+          2. only plans whose data units moved are re-rewritten (same
+             catalog; a full re-run's new catalog re-plans everything) —
+             scan/table capacities are reused, they depend on data not
+             placement;
+          3. buckets rebuilt; the shared EngineCache keeps every bucket
+             whose signature survived — only changed signatures compile;
+          4. the epoch bumps and the serving state swaps atomically;
+             in-flight batches hold the old state by reference.
+        """
+        from repro.adaptive.migrate import MigrationPlan
+
+        st = self._state
+        mig = MigrationPlan.build(st.part, new_part)
+        kg = mig.apply_kg(st.kg, new_part)
+
+        same_catalog = new_part.catalog is st.part.catalog
+        moved_units = set()
+        if same_catalog:
+            keys = set(st.part.unit_shard) | set(new_part.unit_shard)
+            moved_units = {u for u in keys
+                           if st.part.unit_shard.get(u)
+                           != new_part.unit_shard.get(u)}
+        plans: dict = {}
+        rewritten = 0
+        for q in self.queries:
+            old_plan = st.plans[q.name]
+            # same catalog => same unit_shard key set (incremental moves
+            # reassign values only), so one placement's resolution covers
+            # both sides of the move
+            if same_catalog and not self._query_units(q, new_part) \
+                    & moved_units:
+                plans[q.name] = old_plan
+                continue
+            caps = ([s.scan_cap for s in old_plan.steps], old_plan.table_cap)
+            plans[q.name] = make_plan(q, new_part,
+                                      params=self.params_spec.get(q.name),
+                                      capacities=caps)
+            rewritten += 1
+
+        new_state = self._build_state(st.epoch + 1, new_part, kg, plans)
+        old_sigs = {b.signature for b in st.buckets}
+        new_sigs = {b.signature for b in new_state.buckets}
+        self._state = new_state
+        return {"epoch": new_state.epoch, "n_moved": mig.n_moved,
+                "moved_fraction": mig.moved_fraction,
+                "plans_rewritten": rewritten,
+                "plans_reused": len(self.queries) - rewritten,
+                "signatures_reused": len(new_sigs & old_sigs),
+                "signatures_new": len(new_sigs - old_sigs),
+                "cap_grew": kg.cap > st.kg.cap}
+
+    # ---- serving -------------------------------------------------------
 
     def serve(self, requests: list[tuple[str, np.ndarray | None]],
               block: bool = True):
@@ -106,18 +237,24 @@ class WorkloadServer:
 
         Requests are grouped per bucket (one engine dispatch per bucket that
         appears in the batch), identical instances are collapsed (dedup), and
-        each result is (solutions, count, overflow).
+        each result is (solutions, count, overflow). With adaptivity on, the
+        batch also feeds the workload tracker and a drift check (and possibly
+        a migration) runs after the batch completes.
         """
         import jax
 
+        st = self._state
+        track = self.adaptive is not None and self._track
         by_bucket: dict[int, list[tuple[int, int, np.ndarray | None]]] = {}
         for r, (name, pv) in enumerate(requests):
-            bi, pi = self.route[name]
+            bi, pi = st.route[name]
             by_bucket.setdefault(bi, []).append((r, pi, pv))
+            if track:
+                self.adaptive.record(name, st.buckets[bi].plans[pi])
 
         results: list = [None] * len(requests)
         for bi, items in by_bucket.items():
-            bucket = self.buckets[bi]
+            bucket = st.buckets[bi]
             reqs = [(pi, pv) for _, pi, pv in items]
             if self.dedup:
                 unique, inverse = dedup_requests(reqs)
@@ -131,7 +268,7 @@ class WorkloadServer:
             padded = unique + [(0, None)] * (n_pad - len(unique))
             fn = self._engine(bucket)
             pd, params = assemble_batch(bucket, padded)
-            out = fn(self._tr, self._va, self._perms, pd, params)
+            out = fn(st.tr, st.va, st.perms, pd, params)
             if block:
                 jax.block_until_ready(out)
             # fillers sit at the tail: truncate before the host-side
@@ -145,11 +282,31 @@ class WorkloadServer:
             self.stats["deduped"] += len(items) - len(unique)
             for (r, _, _), res in zip(items, extracted):
                 results[r] = res
+        if track:
+            self.adaptive.maybe_adapt()
         return results
 
+    def _engine(self, bucket):
+        return self.cache.get(bucket.signature, join_impl=self.join_impl,
+                              max_per_row=self.max_per_row,
+                              gather_cap=self.gather_cap, mesh=self.mesh)
+
+    @contextmanager
+    def tracking_paused(self):
+        """Serve without feeding the workload tracker or running drift
+        checks (warmup, steady-state timing)."""
+        track, self._track = self._track, False
+        try:
+            yield self
+        finally:
+            self._track = track
+
     def warmup(self, requests) -> None:
-        """Compile every bucket the request stream touches."""
-        self.serve(requests)
+        """Compile every bucket the request stream touches. Warmup requests
+        do not feed the workload tracker — replaying the stream to compile
+        shapes must not look like served traffic."""
+        with self.tracking_paused():
+            self.serve(requests)
 
     def reset_stats(self) -> None:
         self.stats = {"served": 0, "executed": 0, "deduped": 0}
@@ -161,18 +318,58 @@ def build_dataset(dataset: str, scale: float, seed: int = 0):
     return generate_bsbm(int(1000 * scale), seed=seed), bsbm_queries()
 
 
-def build_partition(method: str, store, queries, n_shards: int):
+def build_partition(method: str, store, queries, n_shards: int,
+                    query_weights: dict[str, float] | None = None):
     if method == "wawpart":
-        return wawpart_partition(store, queries, n_shards=n_shards)
+        return wawpart_partition(store, queries, n_shards=n_shards,
+                                 query_weights=query_weights)
     if method == "random":
         return random_partition(store, queries, n_shards=n_shards, seed=0)
     return centralized_partition(store, queries)
 
 
-def request_stream(queries, n_requests: int
-                   ) -> list[tuple[str, np.ndarray | None]]:
-    """Round-robin over the workload's template queries."""
-    return [(queries[i % len(queries)].name, None) for i in range(n_requests)]
+def request_stream(queries, n_requests: int, *,
+                   weights: dict[str, float] | None = None,
+                   seed: int = 0) -> list[tuple[str, np.ndarray | None]]:
+    """Request stream over the workload's template queries.
+
+    weights=None keeps the historical deterministic round-robin. With
+    weights ({template name: relative frequency}), requests are sampled
+    i.i.d. from the normalized distribution using the explicit seed — the
+    realistic skewed traffic the adaptive subsystem exists for.
+    """
+    if weights is None:
+        return [(queries[i % len(queries)].name, None)
+                for i in range(n_requests)]
+    names = [q.name for q in queries]
+    p = np.asarray([max(0.0, float(weights.get(n, 0.0))) for n in names])
+    if p.sum() <= 0:
+        raise ValueError("weights give zero total mass over the workload")
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(names), size=n_requests, p=p / p.sum())
+    return [(names[int(i)], None) for i in idx]
+
+
+def drifting_stream(queries, phases: list[tuple[int, dict[str, float]]], *,
+                    seed: int = 0) -> list[tuple[str, np.ndarray | None]]:
+    """Concatenated weighted phases: [(n_requests, weights), ...] — the
+    template mix shifts at each phase boundary. Each phase draws from its
+    own derived seed so streams are reproducible end-to-end."""
+    out: list[tuple[str, np.ndarray | None]] = []
+    for k, (n, w) in enumerate(phases):
+        out.extend(request_stream(queries, n, weights=w, seed=seed + k))
+    return out
+
+
+def two_phase_weights(queries) -> tuple[dict[str, float], dict[str, float]]:
+    """A canonical drifting mix: phase A concentrates on the first half of
+    the workload's templates, phase B on the second half (with a small
+    residual mass everywhere, so both phases exercise all buckets)."""
+    names = [q.name for q in queries]
+    half = max(1, len(names) // 2)
+    a = {n: (8.0 if i < half else 0.5) for i, n in enumerate(names)}
+    b = {n: (0.5 if i < half else 8.0) for i, n in enumerate(names)}
+    return a, b
 
 
 def main() -> None:
@@ -196,6 +393,14 @@ def main() -> None:
                          "per shard) instead of the vmap simulation")
     ap.add_argument("--no-dedup", action="store_true",
                     help="disable scan-dedup of identical batch requests")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="track the live workload, detect drift, and migrate "
+                         "shards under a budget between batches")
+    ap.add_argument("--drift", action="store_true",
+                    help="serve a two-phase stream whose template mix shifts "
+                         "halfway (instead of round-robin)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="stream sampling seed (weighted/drifting streams)")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -212,22 +417,43 @@ def main() -> None:
         mesh = make_engine_mesh(args.n_shards)
 
     store, queries = build_dataset(args.dataset, args.scale)
+
+    if args.drift:
+        wa, wb = two_phase_weights(queries)
+        half = args.requests // 2
+        stream = drifting_stream(
+            queries, [(half, wa), (args.requests - half, wb)],
+            seed=args.seed)
+        phase_a_weights = wa
+    else:
+        stream = request_stream(queries, args.requests)
+        phase_a_weights = None
+
     t0 = time.time()
-    part = build_partition(args.method, store, queries, args.n_shards)
+    part = build_partition(args.method, store, queries, args.n_shards,
+                           query_weights=phase_a_weights)
+    adaptive = None
+    if args.adaptive:
+        from repro.adaptive.controller import AdaptiveConfig
+        adaptive = AdaptiveConfig(window=max(64, args.batch * 4),
+                                  check_every=args.batch,
+                                  min_requests=min(64, args.batch))
     server = WorkloadServer(queries, part, join_impl=args.join,
                             max_per_row=args.max_per_row or None,
-                            mesh=mesh, dedup=not args.no_dedup)
+                            mesh=mesh, dedup=not args.no_dedup,
+                            adaptive=adaptive)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
           f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
           f"{len(queries)} template queries in {server.n_buckets} buckets"
           + (f", shard_map on mesh {dict(mesh.shape)}" if mesh is not None
-             else ""))
+             else "")
+          + (", adaptive" if args.adaptive else ""))
     print(f"  per-bucket collective counts (WawPart cuts): "
           f"{server.collective_counts()}")
 
-    stream = request_stream(queries, args.requests)
     # warm every (bucket, padded batch size) shape the stream will produce —
-    # serving throughput below is steady-state, compile-free
+    # serving throughput below is steady-state, compile-free (an adaptive
+    # migration recompiles only changed bucket signatures, mid-stream)
     for i in range(0, len(stream), args.batch):
         server.warmup(stream[i:i + args.batch])
 
@@ -247,10 +473,22 @@ def main() -> None:
     print(f"served {served} requests in {dt*1e3:.1f} ms  "
           f"({served/dt:,.0f} queries/sec, batch={args.batch})")
     st = server.stats
+    per_epoch = "" if server.epoch else f" (<= {server.n_buckets} buckets)"
     print(f"  solutions={n_solutions:,}  overflows={overflows}  "
-          f"compiled engines={server.n_compiles} "
-          f"(<= {server.n_buckets} buckets)  "
+          f"compiled engines={server.n_compiles}{per_epoch}  "
           f"dedup: {st['executed']}/{st['served']} instances executed")
+    if server.adaptive is not None:
+        print(f"  adaptive: epoch={server.epoch}, "
+              f"{server.adaptive.n_migrations} migrations")
+        for ev in server.adaptive.events:
+            mig = ev.migration or {}
+            print(f"    [{ev.severity}] divergence={ev.divergence:.3f} "
+                  f"mode={ev.mode} moved={ev.moved_triples}"
+                  f"/{ev.budget_triples} budget, "
+                  f"cost {ev.cost_before:.0f}->{ev.cost_after:.0f}"
+                  + (f", rewrote {mig['plans_rewritten']} plans, "
+                     f"reused {mig['signatures_reused']} engine sigs"
+                     if mig else ""))
 
 
 if __name__ == "__main__":

@@ -127,10 +127,53 @@ except CapacityOverflowError as e:
 print("SERVER_SHARD_MAP_OK")
 """
 
+SCRIPT_MIGRATE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.adaptive.repartition import incremental_repartition
+from repro.core.partitioner import wawpart_partition
+from repro.kg.generator import generate_lubm
+from repro.kg.workloads import lubm_queries
+from repro.launch.mesh import make_engine_mesh
+from repro.launch.serve import (WorkloadServer, request_stream,
+                                two_phase_weights)
+
+# adaptive migration on a real mesh: after migrate(), the shard_map server's
+# results must match a from-scratch server on the new partitioning, on both
+# the shard_map and vmap paths (ISSUE-3 differential (b))
+store = generate_lubm(1, scale=0.08, seed=0)
+qs = lubm_queries()
+wa, wb = two_phase_weights(qs)
+part = wawpart_partition(store, qs, n_shards=3, query_weights=wa)
+res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+assert res.mode == "incremental", res.mode
+stream = request_stream(qs, 32)
+mesh = make_engine_mesh(3)
+sm = WorkloadServer(qs, part, mesh=mesh)
+before = sm.serve(stream)
+rep = sm.migrate(res.part)
+assert rep["epoch"] == sm.epoch == 1, rep
+assert rep["n_moved"] == res.moved_triples
+fresh_sm = WorkloadServer(qs, res.part, mesh=make_engine_mesh(3))
+fresh_vm = WorkloadServer(qs, res.part)
+after = sm.serve(stream)
+want_sm = fresh_sm.serve(stream)
+want_vm = fresh_vm.serve(stream)
+for (a, na, ova), (b, nb, ovb), (c_, nc, ovc) in zip(after, want_sm, want_vm):
+    assert na == nb == nc and ova == ovb == ovc
+    assert np.array_equal(a, b) and np.array_equal(a, c_)
+# placement changes never change query semantics
+for (a, na, _), (b, nb, _) in zip(before, after):
+    assert na == nb and np.array_equal(a, b)
+print("MIGRATE_SHARD_MAP_OK")
+"""
+
 
 @pytest.mark.parametrize("script,token", [
     (SCRIPT_DIFF, "BATCH_SHARD_MAP_OK"),
     (SCRIPT_SERVER, "SERVER_SHARD_MAP_OK"),
+    (SCRIPT_MIGRATE, "MIGRATE_SHARD_MAP_OK"),
 ])
 def test_batch_shard_map(script, token):
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}

@@ -1,7 +1,4 @@
 """Algorithm 2 invariants: totality, no replication, balance, objective."""
-import numpy as np
-import pytest
-
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # optional dep: property tests skip cleanly
@@ -9,7 +6,6 @@ except ImportError:  # optional dep: property tests skip cleanly
 
 from repro.core.partitioner import (centralized_partition, random_partition,
                                     wawpart_partition, workload_join_stats)
-from repro.kg.generator import generate_lubm
 from repro.kg.query import Query, TriplePattern as T, c, v
 from repro.kg.triples import TripleStore
 from repro.kg.workloads import bsbm_queries, lubm_queries
@@ -95,3 +91,98 @@ def test_weights_sensitivity(lubm_small):
     # both valid partitionings
     for p in (p1, p2):
         assert int(p.shard_sizes.sum()) == len(lubm_small)
+
+
+def test_feature_shards_outside_workload_fallback(lubm_small):
+    """Features the analyzed workload never mentions still resolve to shard
+    sets: a P feature spans every unit of its predicate, a PO feature only
+    the units that can hold its (p, o) triples."""
+    from repro.core.features import Feature
+
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    cat = part.catalog
+
+    # workload features resolve through the catalog (no fallback)
+    f_known = Feature("P", "ub:takesCourse")
+    assert f_known in cat.feature_units
+    want = {part.unit_shard[u] for u in cat.feature_units[f_known]
+            if u in part.unit_shard}
+    assert part.feature_shards(f_known) == frozenset(want)
+
+    # P feature on a predicate outside the workload: spans the predicate's
+    # placed units (the balancing module may have chunked it anywhere)
+    outside_p = sorted({u.p for u in part.unit_shard}
+                       - {f.p for f in cat.feature_units})
+    assert outside_p, "LUBM has predicates its 14 queries never touch"
+    f_p = Feature("P", outside_p[0])
+    shards = part.feature_shards(f_p)
+    assert shards <= frozenset(range(3)) and shards
+    assert shards == frozenset(part.unit_shard[u] for u in part.unit_shard
+                               if u.p == outside_p[0])
+
+    # PO feature outside the workload: only units with matching object or
+    # object-free units (RES/ALL/CHUNK) qualify, so the set can only shrink
+    f_po = Feature("PO", outside_p[0], "ub:NoSuchObject")
+    assert part.feature_shards(f_po) <= shards
+
+    # PO outside the workload on a predicate *with* workload PO units: the
+    # fallback must not claim sibling PO units of different objects
+    f_other = Feature("PO", "rdf:type", "ub:NoSuchClass")
+    covered = part.feature_shards(f_other)
+    typed = {u for u in part.unit_shard if u.p == "rdf:type"}
+    assert covered == frozenset(
+        part.unit_shard[u] for u in typed if u.o in ("ub:NoSuchClass", None))
+
+    # unknown predicate: no units anywhere -> empty shard set
+    assert part.feature_shards(Feature("P", "no:such")) == frozenset()
+
+
+def test_workload_join_stats_consistency(lubm_small):
+    """per_query decomposition sums to the totals, every query's edges are
+    all accounted for, and the weighted view scales per-query counts."""
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    stats = workload_join_stats(qs, part)
+    assert set(stats["per_query"]) == {q.name for q in qs}
+    assert stats["local"] == sum(v["local"] for v in stats["per_query"].values())
+    assert stats["distributed"] == sum(v["distributed"]
+                                       for v in stats["per_query"].values())
+    for q in qs:
+        pq = stats["per_query"][q.name]
+        assert pq["local"] + pq["distributed"] == len(q.join_edges())
+    assert stats["traffic"] >= stats["distributed"]  # >= 1 traffic per edge
+    # uniform weights reproduce the unweighted counts
+    assert stats["weighted_local"] == stats["local"]
+    assert stats["weighted_distributed"] == stats["distributed"]
+    uni = workload_join_stats(qs, part, {q.name: 1.0 for q in qs})
+    assert uni["weighted_distributed"] == stats["distributed"]
+    assert uni["traffic"] == stats["traffic"]
+    # doubling one query's weight adds exactly its distributed count
+    target = qs[1]   # LUBM-Q2: join-rich
+    w2 = {q.name: (2.0 if q is target else 1.0) for q in qs}
+    bumped = workload_join_stats(qs, part, w2)
+    assert bumped["weighted_distributed"] == stats["distributed"] \
+        + stats["per_query"][target.name]["distributed"]
+    # zero-weight workload: weighted view vanishes, raw counts remain
+    zero = workload_join_stats(qs, part, {})
+    assert zero["weighted_distributed"] == 0.0 and zero["traffic"] == 0.0
+    assert zero["distributed"] == stats["distributed"]
+
+
+def test_workload_join_stats_edge_queries(lubm_small):
+    """Single-pattern (edge-free) and unknown-predicate queries contribute
+    zero edges without breaking the stats."""
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    extra = [
+        Query("NOEDGE", (T(v("X"), c("rdf:type"), c("ub:Student")),)),
+        Query("NOPRED", (T(v("X"), c("no:such"), v("Y")),
+                         T(v("X"), c("rdf:type"), c("ub:Student")))),
+    ]
+    stats = workload_join_stats(qs + extra, part)
+    assert stats["per_query"]["NOEDGE"] == {"local": 0, "distributed": 0}
+    # the unknown predicate contributes no units, so the SS edge's locality
+    # is decided by the remaining side alone — PO(type, Student) is a single
+    # unit on a single shard (and the empty side returns nothing anyway)
+    assert stats["per_query"]["NOPRED"] == {"local": 1, "distributed": 0}
