@@ -1,0 +1,184 @@
+"""KG query-kernel bench: jnp backend vs Pallas kg_scan/kg_join kernels.
+
+Three sections, each timed on both execution backends with a bit-equality
+honesty check before any number is reported:
+
+  * scan — the fused masked triple-pattern scan (predicate + hit-count
+    prefix sum) over every shard of a LUBM ShardedKG, vmapped, jitted;
+  * join — the merge-join candidate-range search (counting searchsorted)
+    and the expand-join compat matrix on serving-shaped operands;
+  * serve — end-to-end batched workload serving (WorkloadServer, batch=64)
+    with `backend="jnp"` vs `backend="pallas"`.
+
+On TPU the pallas rows measure the native kernels; elsewhere they measure
+interpret mode (`default_interpret()`), i.e. the correctness rig rather
+than kernel speed — the jnp-vs-pallas ratio on CPU is an interpret-mode
+overhead number, not a hardware claim. The JSON artifact
+(``BENCH_kernels.json``) records backend, platform, shapes, and
+microseconds per call, seeding the cross-PR kernel perf trajectory.
+
+--smoke runs a tiny configuration (CI rot-guard): one iteration, small
+shapes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _steady(fn, iters: int) -> float:
+    fn()                                   # warmup/compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _row(section: str, backend: str, us: float, **derived) -> dict:
+    print(f"kernels/{section}/{backend},{us:.1f}," +
+          ";".join(f"{k}={v}" for k, v in derived.items()))
+    return {"us_per_call": us, **derived}
+
+
+def run(scale: float = 0.1, iters: int = 5, n_requests: int = 64,
+        batch: int = 64) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.engine.federated import ShardedKG
+    from repro.engine.primitives import (BACKENDS, compat_matrix,
+                                         join_ranges, scan_hits)
+    from repro.launch.serve import (WorkloadServer, build_dataset,
+                                    build_partition, request_stream)
+
+    store, queries = build_dataset("lubm", scale)
+    part = build_partition("wawpart", store, queries, 3)
+    kg = ShardedKG.build(part)
+    tr, va = jnp.asarray(kg.triples), jnp.asarray(kg.valid)
+    out: dict = {"_meta": {"platform": jax.default_backend(),
+                           "n_triples": len(store), "shard_cap": kg.cap,
+                           "n_shards": kg.n_shards,
+                           "n_requests": n_requests}}
+
+    # -- scan: fused predicate + hit-count over every shard ---------------
+    # a type scan (predicate bound, object bound): the workload's most
+    # common unselective pattern shape
+    pid = int(store.predicates[0])
+    spo = jnp.asarray([-1, pid, -1], jnp.int32)
+
+    ref = None
+    out["scan"] = {}
+    for backend in BACKENDS:
+        fn = jax.jit(jax.vmap(
+            lambda t, v, b=backend: scan_hits(t, v, spo, None, backend=b)))
+        got = jax.block_until_ready(fn(tr, va))
+        if ref is None:
+            ref = got
+        else:   # honesty: identical hit masks and counts before timing
+            assert all(np.array_equal(a, b) for a, b in zip(ref, got)), \
+                "scan backends disagree"
+        dt = _steady(lambda: jax.block_until_ready(fn(tr, va)), iters)
+        out["scan"][backend] = _row(
+            "scan", backend, dt * 1e6, rows_per_shard=kg.cap,
+            shards=kg.n_shards,
+            mrows_per_s=round(kg.cap * kg.n_shards / dt / 1e6, 1))
+
+    # -- join: candidate ranges + compat matrix ---------------------------
+    rng = np.random.default_rng(0)
+    C = min(2048, kg.cap)
+    R = 1024
+    keys = np.sort(rng.integers(0, 10_000, (kg.n_shards, C)), axis=1) \
+        .astype(np.int32)
+    rkey = jnp.asarray(rng.integers(0, 10_000, (R,)).astype(np.int32))
+    keys = jnp.asarray(keys)
+    ref = None
+    out["join_ranges"] = {}
+    for backend in BACKENDS:
+        fn = jax.jit(lambda k, r, b=backend: join_ranges(k, r, backend=b))
+        got = jax.block_until_ready(fn(keys, rkey))
+        if ref is None:
+            ref = got
+        else:
+            assert all(np.array_equal(a, b) for a, b in zip(ref, got)), \
+                "join_ranges backends disagree"
+        dt = _steady(lambda: jax.block_until_ready(fn(keys, rkey)), iters)
+        out["join_ranges"][backend] = _row(
+            "join_ranges", backend, dt * 1e6, rows=R, cols=C,
+            blocks=kg.n_shards)
+
+    table = jnp.asarray(rng.integers(-1, 10_000, (R, 4)).astype(np.int32))
+    tmask = jnp.asarray(rng.uniform(size=R) < 0.8)
+    matches = jnp.asarray(rng.integers(-1, 10_000, (C, 3)).astype(np.int32))
+    mmask = jnp.asarray(rng.uniform(size=C) < 0.8)
+    kind = jnp.asarray([1, 0, 2], jnp.int32)
+    col = jnp.asarray([1, 0, 2], jnp.int32)
+    ref = None
+    out["compat"] = {}
+    for backend in BACKENDS:
+        fn = jax.jit(lambda *a, b=backend: compat_matrix(*a, backend=b))
+        got = jax.block_until_ready(fn(table, tmask, matches, mmask, kind,
+                                       col))
+        if ref is None:
+            ref = got
+        else:
+            assert np.array_equal(np.asarray(ref), np.asarray(got)), \
+                "compat backends disagree"
+        dt = _steady(lambda: jax.block_until_ready(
+            fn(table, tmask, matches, mmask, kind, col)), iters)
+        out["compat"][backend] = _row("compat", backend, dt * 1e6,
+                                      rows=R, cols=C)
+
+    # -- end-to-end: batched workload serving, backend vs backend ---------
+    stream = request_stream(queries, n_requests)
+    ref = None
+    out["serve_batch"] = {}
+    for backend in BACKENDS:
+        server = WorkloadServer(queries, part, dedup=False, backend=backend)
+        res = server.serve(stream)
+        assert not any(bool(ovf) for _, _, ovf in res), f"{backend}: overflow"
+        if ref is None:
+            ref = res
+        else:
+            for (a, na, _), (b, nb, _) in zip(ref, res):
+                assert na == nb and np.array_equal(a, b), \
+                    "serving backends disagree"
+
+        def serve_all(server=server):
+            for i in range(0, len(stream), batch):
+                server.serve(stream[i:i + batch])
+
+        dt = _steady(serve_all, iters)
+        out["serve_batch"][backend] = _row(
+            "serve_batch", backend, dt / n_requests * 1e6,
+            qps=round(n_requests / dt), batch=batch,
+            compiles=server.n_compiles, buckets=server.n_buckets)
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration: small scale, 1 iteration")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full result dict as JSON "
+                         "(BENCH_kernels.json: the kernel perf trajectory)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        res = run(scale=0.05, iters=1, n_requests=16, batch=16)
+    else:
+        res = run()
+
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"kernels/json,0,wrote_{args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,13 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   §3.2   distributed-join counts + traffic (the objective)
   §Serve batched workload-serving throughput (beyond-paper)
   §Adapt adaptive vs static serving under workload drift (beyond-paper)
+  §Kern  jnp vs Pallas kg_scan/kg_join query kernels (beyond-paper)
   §Roofline (if results/dryrun.jsonl exists)
 
-The serving and adaptive sections also write machine-readable
-``BENCH_serve.json`` / ``BENCH_adaptive.json`` next to the CSV stream, so
-the perf trajectory is tracked (and diffable) across PRs.
+The serving, adaptive, and kernel sections also write machine-readable
+``BENCH_serve.json`` / ``BENCH_adaptive.json`` / ``BENCH_kernels.json``
+next to the CSV stream, so the perf trajectory is tracked (and diffable)
+across PRs.
 
 ``--dry-run`` imports every bench section and checks its entry point without
 executing any measurement — a fast CI rot-guard for the harness itself.
@@ -24,7 +26,8 @@ import os
 import sys
 
 SECTIONS = ("bench_joins", "bench_balance", "bench_lubm", "bench_bsbm",
-            "bench_averages", "bench_serve_throughput", "bench_adaptive")
+            "bench_averages", "bench_serve_throughput", "bench_adaptive",
+            "bench_kernels")
 
 
 def dry_run() -> None:
@@ -56,8 +59,8 @@ def main() -> None:
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
     from benchmarks import (bench_adaptive, bench_averages, bench_balance,
-                            bench_bsbm, bench_joins, bench_lubm,
-                            bench_serve_throughput)
+                            bench_bsbm, bench_joins, bench_kernels,
+                            bench_lubm, bench_serve_throughput)
     print("name,us_per_call,derived")
     bench_joins.main()
     bench_balance.main()
@@ -66,6 +69,7 @@ def main() -> None:
     bench_averages.main()
     bench_serve_throughput.main(["--json", "BENCH_serve.json"])
     bench_adaptive.main(["--json", "BENCH_adaptive.json"])
+    bench_kernels.main(["--json", "BENCH_kernels.json"])
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline
         roofline.main()

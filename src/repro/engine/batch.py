@@ -29,6 +29,12 @@ through the overflow flag), `eq` / `param` / `noop` (any member uses
 intra-pattern equality / runtime params / padding at this step), and
 `new_mode` ("all" / "none" / "mixed": whether member steps bind new
 variables, which selects the expansion, semijoin, or both join outcomes).
+
+The scan/join primitives themselves live in `engine/primitives` (shared
+with the per-query engine) and execute on a pluggable backend: "jnp"
+(dense XLA) or "pallas" (fused kernels/kg_scan + kernels/kg_join), chosen
+per engine build and keyed into the EngineCache. Results are bit-identical
+across backends on every path (vmap, shard_map, adaptive migration).
 """
 from __future__ import annotations
 
@@ -42,9 +48,13 @@ import numpy as np
 from repro.engine.federated import (AXIS, ShardedKG, check_gather_cap,
                                     check_mesh, compact, raise_on_overflow)
 from repro.engine.planner import PhysicalPlan, pad_plan
+from repro.engine.primitives import (DEFAULT_BLOCKS, EQ_PAIRS, INT_MAX,
+                                     KernelBlocks, check_backend,
+                                     compat_matrix, join_ranges, scan_hits,
+                                     select_cap, select_from_cum)
 
-_EQ_PAIRS = ((0, 1), (0, 2), (1, 2))
-_INT_MAX = np.int32(2**31 - 1)
+_EQ_PAIRS = EQ_PAIRS   # shared sentinels: one definition, engine/primitives
+_INT_MAX = INT_MAX
 
 
 class PlanData(NamedTuple):
@@ -207,49 +217,20 @@ def bucket_plans(plans: list[PhysicalPlan], *,
 # data-driven engine primitives
 # ---------------------------------------------------------------------------
 
-def _select_cap(mask, cap: int):
-    """Stable compaction: (idx, sel, total) where idx[j] is the position of
-    the j-th set entry of mask (clamped past `total`), sel = arange < total.
-
-    Equivalent to idx = argsort(~mask)[:cap]; sel = mask[idx] — but built
-    from a cumsum plus a vectorized binary search. XLA:CPU runs sort, top_k,
-    and vmapped scatter at ~100-200ns/element on this path, an order of
-    magnitude slower than elementwise + gather ops; this compaction runs once
-    per plan step per (batch, shard) instance and dominated the engine's
-    profile in every earlier formulation.
-    """
-    n = mask.shape[0]
-    k = min(cap, n)
-    cum = jnp.cumsum(mask.astype(jnp.int32))
-    total = cum[-1]
-    idx = jnp.searchsorted(cum, jnp.arange(1, k + 1, dtype=jnp.int32),
-                           side="left")
-    idx = jnp.clip(idx, 0, n - 1)
-    sel = jnp.arange(k) < total
-    return idx, sel, total
+_select_cap = select_cap   # one implementation: engine/primitives (shared
+                           # with the per-query engine and the kernel refs)
 
 
-def _scan_hit(triples, valid, spo, eq, use_eq: bool):
-    """Pattern-match mask over a shard, constants/equality gates as data."""
-    s, p, o = spo[0], spo[1], spo[2]
-    hit = valid
-    hit = hit & jnp.where(s == -1, True, triples[:, 0] == s)
-    hit = hit & jnp.where(p == -1, True, triples[:, 1] == p)
-    hit = hit & jnp.where(o == -1, True, triples[:, 2] == o)
-    hit = hit & (s != -2) & (p != -2) & (o != -2)
-    if use_eq:
-        for k, (a, b) in enumerate(_EQ_PAIRS):
-            hit = hit & (~eq[k] | (triples[:, a] == triples[:, b]))
-    return hit
-
-
-def _materialize(triples, hit, cap: int):
+def _materialize(triples, hit, cum, cap: int):
     """Compact matching rows to (min(cap, N), 3) in shard order — when the
     static cap covers the whole shard the selection (and the overflow
-    reduction) is dropped from the trace entirely."""
+    reduction) is dropped from the trace entirely. `cum` is the hit mask's
+    inclusive prefix sum — jnp.cumsum on the jnp backend, the fused kg_scan
+    kernel output on the pallas backend (unused when the cap covers the
+    shard; XLA drops the dead jnp cumsum)."""
     if cap >= triples.shape[0]:
         return triples, hit, jnp.zeros((), bool)
-    idx, mm, total = _select_cap(hit, cap)
+    idx, mm, total = select_from_cum(cum, cap)
     return triples[idx], mm, total > cap
 
 
@@ -329,17 +310,16 @@ def _seed_join(table, matches, mmask, kind, col, new_mode: str):
     return _mix(new_mode, kind, expansion, semijoin)
 
 
-def _join_data(table, tmask, matches, mmask, kind, col, new_mode: str):
-    """Expand-and-filter join with the join structure as runtime data."""
+def _join_data(table, tmask, matches, mmask, kind, col, new_mode: str, *,
+               backend: str = "jnp", blocks: KernelBlocks = DEFAULT_BLOCKS):
+    """Expand-and-filter join with the join structure as runtime data. The
+    R x C compatibility matrix comes from the shared primitive (dense jnp
+    or the tiled kg_join kernel); the expansion/semijoin epilogues are
+    backend-independent."""
     R, V = table.shape
     C = matches.shape[0]
-    compat = tmask[:, None] & mmask[None, :]
-    for pos in range(3):
-        cc = jnp.clip(col[pos], 0, V - 1)
-        compat = compat & jnp.where(
-            kind[pos] == 1,
-            jnp.take(table, cc, axis=1)[:, None] == matches[None, :, pos],
-            True)
+    compat = compat_matrix(table, tmask, matches, mmask, kind, col,
+                           backend=backend, blocks=blocks)
 
     def expansion():
         flat = compat.reshape(-1)
@@ -358,7 +338,9 @@ def _join_data(table, tmask, matches, mmask, kind, col, new_mode: str):
 
 def _join_merge(table, tmask, m_blocks, mm_blocks, pos0, kind, col,
                 new_mode: str, *, max_per_row: int,
-                verify_mask: tuple[bool, bool, bool]):
+                verify_mask: tuple[bool, bool, bool],
+                backend: str = "jnp",
+                blocks: KernelBlocks = DEFAULT_BLOCKS):
     """Merge join against per-shard match blocks whose pos0 keys are sorted
     (valid prefix) by construction — a binary search per block locates each
     table row's candidate range, up to max_per_row candidates *per block* are
@@ -381,8 +363,7 @@ def _join_merge(table, tmask, m_blocks, mm_blocks, pos0, kind, col,
 
     keys = jnp.where(mm_blocks, jnp.take(m_blocks, pos0, axis=2), _INT_MAX)
     rkey = jnp.take(table, col0, axis=1)
-    lo = jax.vmap(lambda k: jnp.searchsorted(k, rkey, side="left"))(keys)
-    hi = jax.vmap(lambda k: jnp.searchsorted(k, rkey, side="right"))(keys)
+    lo, hi = join_ranges(keys, rkey, backend=backend, blocks=blocks)
     counts = jnp.where(tmask[None, :], hi - lo, 0)       # (S_b, R)
     overflow_fanout = jnp.max(counts) > K
 
@@ -435,7 +416,8 @@ def _join_merge(table, tmask, m_blocks, mm_blocks, pos0, kind, col,
 def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
                         max_per_row: int | None = None,
                         gather_cap: int | None = None,
-                        axis_name: str = AXIS):
+                        axis_name: str = AXIS, backend: str = "jnp",
+                        kernel_blocks: KernelBlocks | None = None):
     """Build engine(triples, valid, perms, pdata, params) ->
     (table, mask, overflow) for one bucket signature. The engine is
     plan-agnostic: every member plan of any bucket with this signature runs
@@ -449,8 +431,17 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
     is the signature's data-sized fanout cap — one unselective join (LUBM Q8
     dept->students) must not widen every other step's window; pass an int
     only to clamp it further (risking overflow, which the flag reports).
+
+    backend: "jnp" executes the scan/join primitives as dense XLA ops;
+    "pallas" routes the pattern scan (fused predicate + hit-count prefix
+    sum) through kernels/kg_scan and the join kernels (candidate-range
+    search, compat matrix) through kernels/kg_join, bit-identically —
+    engine composition (vmap batching, shard_map collectives, overflow
+    flags) is backend-independent. kernel_blocks sets the kernels' tile
+    sizes (a compile-cache key; see EngineCache).
     """
     check_gather_cap(gather_cap)
+    blocks = check_backend(backend, kernel_blocks)
     S, L, V, R = sig.n_shards, sig.n_steps, sig.n_vars, sig.table_cap
 
     def engine(triples: jax.Array, valid: jax.Array, perms: jax.Array,
@@ -459,6 +450,7 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
         table = jnp.full((R, V), -1, jnp.int32)
         tmask = jnp.zeros((R,), bool).at[0].set(True)
         overflow = jnp.zeros((), bool)
+        N = triples.shape[0]
 
         for i in range(L):
             cap = sig.scan_caps[i]
@@ -466,15 +458,33 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
             if sig.param_bits[i]:
                 spo = jnp.where(pd.pidx[i] >= 0,
                                 params[jnp.clip(pd.pidx[i], 0)], spo)
-            hit = _scan_hit(triples, valid, spo, pd.eq[i], sig.eq_bits[i])
+            eq = pd.eq[i] if sig.eq_bits[i] else None
+            va = valid
             if sig.gather_bits[i] and S > 1:
-                hit = hit & pd.owner[i, my]
+                # owner gate folded into the validity mask so the fused
+                # scan's hit-count already reflects it (== hit & owner)
+                va = va & pd.owner[i, my]
             merge = (i > 0 and join_impl == "sorted" and sig.sorted_bits[i])
 
             if merge:   # matches per block, pos0-key-sorted by construction
                 pos0 = jnp.argmax(pd.kind[i] == 1)
-                m, mm, step_ovf = _materialize_view(triples, perms, hit,
-                                                    pos0, cap)
+                if backend == "pallas":
+                    # scan the permuted view directly: the kernel's fused
+                    # hit-count is then the compaction cumsum for the
+                    # sorted-by-construction block (rowwise predicate
+                    # commutes with the permutation)
+                    perm = perms[pos0]
+                    tp = triples[perm]
+                    _, cum = scan_hits(tp, va[perm], spo, eq,
+                                       backend=backend, blocks=blocks)
+                    idx, mm, total = select_from_cum(cum, min(cap, N))
+                    m = tp[idx]
+                    step_ovf = (total > cap) if cap < N \
+                        else jnp.zeros((), bool)
+                else:
+                    hit, _ = scan_hits(triples, va, spo, eq)
+                    m, mm, step_ovf = _materialize_view(triples, perms, hit,
+                                                        pos0, cap)
                 if sig.gather_bits[i] and S > 1:
                     m = jax.lax.all_gather(m, axis_name)       # (S, C, 3)
                     mm = jax.lax.all_gather(mm, axis_name)     # (S, C)
@@ -485,9 +495,12 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
                 t2, m2, ovf_j = _join_merge(
                     table, tmask, m, mm, pos0, pd.kind[i], pd.col[i],
                     sig.new_modes[i], max_per_row=K,
-                    verify_mask=sig.verify_masks[i])
+                    verify_mask=sig.verify_masks[i], backend=backend,
+                    blocks=blocks)
             else:
-                m, mm, step_ovf = _materialize(triples, hit, cap)
+                hit, cum = scan_hits(triples, va, spo, eq, backend=backend,
+                                     blocks=blocks)
+                m, mm, step_ovf = _materialize(triples, hit, cum, cap)
                 if sig.gather_bits[i] and S > 1:
                     C = m.shape[0]
                     m = jax.lax.all_gather(m, axis_name).reshape(S * C, 3)
@@ -501,7 +514,9 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
                 else:
                     t2, m2, ovf_j = _join_data(table, tmask, m, mm,
                                                pd.kind[i], pd.col[i],
-                                               sig.new_modes[i])
+                                               sig.new_modes[i],
+                                               backend=backend,
+                                               blocks=blocks)
             if sig.noop_bits[i]:         # some member pads here: gate
                 noop = pd.noop[i]
                 table = jnp.where(noop, table, t2)
@@ -519,7 +534,9 @@ def make_sharded_batched_engine(sig: BucketSignature, mesh, *,
                                 join_impl: str = "expand",
                                 max_per_row: int | None = None,
                                 gather_cap: int | None = None,
-                                axis_name: str = AXIS):
+                                axis_name: str = AXIS,
+                                backend: str = "jnp",
+                                kernel_blocks: KernelBlocks | None = None):
     """shard_map counterpart of the vmapped bucket engine: same call shape
     fn(triples, valid, perms, pdata, params) -> (table, mask, overflow) with
     a (batch, shard, ...) result layout, but the shard axis is a real mesh
@@ -535,15 +552,21 @@ def make_sharded_batched_engine(sig: BucketSignature, mesh, *,
     check_mesh(mesh, sig.n_shards, axis_name)
     engine = make_batched_engine(sig, join_impl=join_impl,
                                  max_per_row=max_per_row,
-                                 gather_cap=gather_cap, axis_name=axis_name)
+                                 gather_cap=gather_cap, axis_name=axis_name,
+                                 backend=backend,
+                                 kernel_blocks=kernel_blocks)
 
     def kernel(triples, valid, perms, pd, params):
         t, m, o = jax.vmap(engine, in_axes=(None, None, None, 0, 0))(
             triples[0], valid[0], perms[0], pd, params)
         return t[None], m[None], o[None]
 
+    # the shard_map replication checker has no rule for pallas_call; the
+    # pallas engine is per-shard SPMD like the jnp one, so skipping the
+    # check (not the collectives) is sound — jnp keeps the checked path
     sm = shard_map_compat(kernel, mesh=mesh, in_specs=kg_specs(axis_name),
-                          out_specs=kg_out_specs(axis_name))
+                          out_specs=kg_out_specs(axis_name),
+                          check_rep=backend != "pallas")
 
     def fn(triples, valid, perms, pd, params):
         t, m, o = sm(triples, valid, perms, pd, params)
@@ -562,7 +585,10 @@ class EngineCache:
     buckets" check reads it (jax.jit re-specializes internally per batch
     shape, which the steady-state serving loop never changes). A mesh keys
     the shard_map variant: vmapped and sharded engines for one signature are
-    distinct programs and cache side by side.
+    distinct programs and cache side by side. The execution backend and its
+    kernel tile sizes key the cache the same way: a jnp engine and a pallas
+    engine for one signature — or two pallas engines with different
+    KernelBlocks — are distinct compiled programs and must never collide.
     """
 
     def __init__(self) -> None:
@@ -572,19 +598,24 @@ class EngineCache:
 
     def get(self, sig: BucketSignature, *, join_impl: str = "expand",
             max_per_row: int | None = None, gather_cap: int | None = None,
-            axis_name: str = AXIS, mesh=None):
-        key = (sig, join_impl, max_per_row, gather_cap, axis_name, mesh)
+            axis_name: str = AXIS, mesh=None, backend: str = "jnp",
+            kernel_blocks: KernelBlocks | None = None):
+        blocks = check_backend(backend, kernel_blocks)
+        key = (sig, join_impl, max_per_row, gather_cap, axis_name, mesh,
+               backend, blocks)
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
             if mesh is not None:
                 fn = make_sharded_batched_engine(
                     sig, mesh, join_impl=join_impl, max_per_row=max_per_row,
-                    gather_cap=gather_cap, axis_name=axis_name)
+                    gather_cap=gather_cap, axis_name=axis_name,
+                    backend=backend, kernel_blocks=blocks)
             else:
                 engine = make_batched_engine(
                     sig, join_impl=join_impl, max_per_row=max_per_row,
-                    gather_cap=gather_cap, axis_name=axis_name)
+                    gather_cap=gather_cap, axis_name=axis_name,
+                    backend=backend, kernel_blocks=blocks)
                 fn = jax.jit(jax.vmap(
                     jax.vmap(engine, in_axes=(0, 0, 0, None, None),
                              axis_name=axis_name),           # shard axis
@@ -675,7 +706,9 @@ def run_batched(bucket: PlanBucket, kg: ShardedKG,
                 *, join_impl: str = "expand", max_per_row: int | None = None,
                 gather_cap: int | None = None, cache: EngineCache | None = None,
                 perms: np.ndarray | None = None, mesh=None,
-                dedup: bool = False, strict: bool = False):
+                dedup: bool = False, strict: bool = False,
+                backend: str = "jnp",
+                kernel_blocks: KernelBlocks | None = None):
     """Execute a batch of requests against one bucket.
 
     mesh=None runs the vmap simulation; a mesh routes through the shard_map
@@ -684,8 +717,9 @@ def run_batched(bucket: PlanBucket, kg: ShardedKG,
     (from shard_perms(kg)) can be passed in to amortize the per-shard sort
     permutations across calls. dedup=True collapses identical (plan, params)
     requests to one executed instance. strict=True raises
-    CapacityOverflowError on any request's overflow flag. Returns the list
-    of per-request (solutions, count, overflow).
+    CapacityOverflowError on any request's overflow flag. backend selects
+    the execution backend ("jnp" | "pallas" — bit-identical results).
+    Returns the list of per-request (solutions, count, overflow).
     """
     check_gather_cap(gather_cap)
     if requests is None:
@@ -694,7 +728,8 @@ def run_batched(bucket: PlanBucket, kg: ShardedKG,
         else (requests, None)
     cache = cache or EngineCache()
     fn = cache.get(bucket.signature, join_impl=join_impl,
-                   max_per_row=max_per_row, gather_cap=gather_cap, mesh=mesh)
+                   max_per_row=max_per_row, gather_cap=gather_cap, mesh=mesh,
+                   backend=backend, kernel_blocks=kernel_blocks)
     pd, params = assemble_batch(bucket, exec_reqs)
     if perms is None:
         perms = shard_perms(kg)

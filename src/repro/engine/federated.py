@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.partitioner import Partitioning
 from repro.engine.local import compact, join_step, join_step_sorted, scan_shard
 from repro.engine.planner import PhysicalPlan
+from repro.engine.primitives import check_backend
 
 AXIS = "shards"
 
@@ -108,13 +109,17 @@ class ShardedKG:
 
 def make_engine(plan: PhysicalPlan, *, join_impl: str = "expand",
                 max_per_row: int = 64, gather_cap: int | None = None,
-                axis_name: str = AXIS):
+                axis_name: str = AXIS, backend: str = "jnp",
+                kernel_blocks=None):
     """Build engine(triples, valid, params) -> (table, mask, overflow).
 
     join_impl: "expand" — paper-faithful expand-and-filter join;
                "sorted" — beyond-paper sort-merge join (§Perf).
     gather_cap: post-all_gather compaction size (default: keep S*scan_cap).
+    backend: "jnp" — dense XLA primitives; "pallas" — fused kg_scan/kg_join
+    kernels (bit-identical results; kernel_blocks sets their tile sizes).
     """
+    blocks = check_backend(backend, kernel_blocks)
     S = plan.n_shards
 
     def engine(triples: jax.Array, valid: jax.Array, params: jax.Array):
@@ -136,7 +141,8 @@ def make_engine(plan: PhysicalPlan, *, join_impl: str = "expand",
                 else:
                     o_ = val
             m, mm, ovf = scan_shard(triples, valid, s_, p_, o_, step.eqs,
-                                    step.scan_cap)
+                                    step.scan_cap, backend=backend,
+                                    blocks=blocks)
             overflow = overflow | ovf
 
             if step.gather and S > 1:
@@ -153,10 +159,12 @@ def make_engine(plan: PhysicalPlan, *, join_impl: str = "expand",
             if join_impl == "sorted":
                 table, tmask, ovf3 = join_step_sorted(
                     table, tmask, m, mm, step.shared, step.new,
-                    max_per_row=max_per_row)
+                    max_per_row=max_per_row, backend=backend, blocks=blocks)
             else:
                 table, tmask, ovf3 = join_step(table, tmask, m, mm,
-                                               step.shared, step.new)
+                                               step.shared, step.new,
+                                               backend=backend,
+                                               blocks=blocks)
             overflow = overflow | ovf3
         return table, tmask, overflow
 
@@ -171,13 +179,15 @@ def run_vmapped(plan: PhysicalPlan, kg: ShardedKG,
                 params: np.ndarray | None = None, *,
                 join_impl: str = "expand", max_per_row: int = 64,
                 gather_cap: int | None = None, jit: bool = True,
-                strict: bool = False):
+                strict: bool = False, backend: str = "jnp",
+                kernel_blocks=None):
     """Single-device simulation: vmap over the shard axis. Returns the PPN
     device's (solutions, count, overflow); strict=True raises
     CapacityOverflowError instead of returning a truncated result."""
     check_gather_cap(gather_cap)
     engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
-                         gather_cap=gather_cap)
+                         gather_cap=gather_cap, backend=backend,
+                         kernel_blocks=kernel_blocks)
     p = jnp.zeros((max(1, plan.n_params),), jnp.int32) if params is None \
         else jnp.asarray(params, jnp.int32)
     fn = jax.vmap(engine, in_axes=(0, 0, None), axis_name=AXIS)
@@ -194,7 +204,8 @@ def run_sharded(plan: PhysicalPlan, kg: ShardedKG, mesh,
                 params: np.ndarray | None = None, *,
                 join_impl: str = "expand", max_per_row: int = 64,
                 gather_cap: int | None = None, axis: str | None = None,
-                strict: bool = False):
+                strict: bool = False, backend: str = "jnp",
+                kernel_blocks=None):
     """shard_map execution on a real mesh axis (dry-run / production).
 
     strict=True raises CapacityOverflowError (same error type and message
@@ -207,15 +218,19 @@ def run_sharded(plan: PhysicalPlan, kg: ShardedKG, mesh,
     axis = axis or AXIS
     check_mesh(mesh, plan.n_shards, axis)
     engine = make_engine(plan, join_impl=join_impl, max_per_row=max_per_row,
-                         gather_cap=gather_cap, axis_name=axis)
+                         gather_cap=gather_cap, axis_name=axis,
+                         backend=backend, kernel_blocks=kernel_blocks)
 
     def kernel(triples, valid, params):
         t, m, o = engine(triples[0], valid[0], params)
         return t[None], m[None], o[None]
 
+    # no shard_map replication rule exists for pallas_call: skip the checker
+    # (not the collectives) on the pallas backend, as in the batched engine
     fn = shard_map_compat(kernel, mesh=mesh,
                           in_specs=(P(axis), P(axis), P()),
-                          out_specs=(P(axis), P(axis), P(axis)))
+                          out_specs=(P(axis), P(axis), P(axis)),
+                          check_rep=backend != "pallas")
     p = jnp.zeros((max(1, plan.n_params),), jnp.int32) if params is None \
         else jnp.asarray(params, jnp.int32)
     table, tmask, overflow = jax.jit(fn)(jnp.asarray(kg.triples),

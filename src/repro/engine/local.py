@@ -1,50 +1,65 @@
 """Tensorized single-shard BGP primitives: pattern scan and binding-table join.
 
-Static-shape building blocks the engine composes per plan step. The baseline
-join is the paper-faithful expand-and-filter (every candidate pair checked,
-like the federated nested-loop join a SPARQL endpoint performs on SERVICE
-results); `join_step_sorted` is the beyond-paper sort-merge variant used by
-the optimized engine (§Perf iteration 1).
+Static-shape building blocks the per-query engine composes per plan step,
+now thin compositions over the shared `engine/primitives` module (one
+implementation serves this module, the batched engine, and the Pallas
+kernel references). The baseline join is the paper-faithful
+expand-and-filter (every candidate pair checked, like the federated
+nested-loop join a SPARQL endpoint performs on SERVICE results);
+`join_step_sorted` is the beyond-paper sort-merge variant used by the
+optimized engine (§Perf iteration 1).
+
+Every entry point takes ``backend`` ("jnp" | "pallas"): "pallas" routes the
+scan predicate + hit-count through the fused kernels/kg_scan kernel and the
+join's compat matrix / candidate-range search through kernels/kg_join,
+bit-identically (see primitives).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.engine.primitives import (DEFAULT_BLOCKS, INT_MAX, KernelBlocks,
+                                     compact, compat_matrix, eq_gates,
+                                     join_ranges, scan_hits, select_cap,
+                                     select_from_cum, static_kind_col)
+
+__all__ = ["NOMATCH", "scan_shard", "join_step", "join_step_sorted",
+           "compact"]
+
 NOMATCH = jnp.int32(-2)
 
 
 def scan_shard(triples: jax.Array, valid: jax.Array, s, p, o,
-               eqs: tuple[tuple[int, int], ...], cap: int):
+               eqs: tuple[tuple[int, int], ...], cap: int, *,
+               backend: str = "jnp",
+               blocks: KernelBlocks = DEFAULT_BLOCKS):
     """Match a triple pattern against a shard.
 
     triples: (N, 3) int32 (padded rows arbitrary), valid: (N,) bool.
     s/p/o: int32 scalars; -1 = wildcard, -2 = never-match.
     Returns (matches (cap, 3), mask (cap,), overflow scalar bool).
     """
-    s = jnp.asarray(s, jnp.int32)
-    p = jnp.asarray(p, jnp.int32)
-    o = jnp.asarray(o, jnp.int32)
-    hit = valid
-    hit = hit & jnp.where(s == -1, True, triples[:, 0] == s)
-    hit = hit & jnp.where(p == -1, True, triples[:, 1] == p)
-    hit = hit & jnp.where(o == -1, True, triples[:, 2] == o)
-    hit = hit & (s != -2) & (p != -2) & (o != -2)
-    for a, b in eqs:
-        hit = hit & (triples[:, a] == triples[:, b])
-    n_hit = jnp.sum(hit)
-    idx = jnp.argsort(~hit)[:cap]
-    m, mm = triples[idx], hit[idx]
+    spo = jnp.stack([jnp.asarray(s, jnp.int32), jnp.asarray(p, jnp.int32),
+                     jnp.asarray(o, jnp.int32)])
+    eq = jnp.asarray(eq_gates(eqs)) if eqs else None
+    hit, cum = scan_hits(triples, valid, spo, eq, backend=backend,
+                         blocks=blocks)
+    n = triples.shape[0]
+    idx, mm, total = select_from_cum(cum, min(cap, n))
+    m = triples[idx]
     if m.shape[0] < cap:  # shard smaller than the scan capacity: pad
         pad = cap - m.shape[0]
         m = jnp.pad(m, ((0, pad), (0, 0)), constant_values=-1)
         mm = jnp.pad(mm, (0, pad))
-    return m, mm, n_hit > cap
+    return m, mm, total > cap
 
 
 def join_step(table: jax.Array, tmask: jax.Array, matches: jax.Array,
               mmask: jax.Array, shared: tuple[tuple[int, int], ...],
-              new: tuple[tuple[int, int], ...]):
+              new: tuple[tuple[int, int], ...], *,
+              backend: str = "jnp",
+              blocks: KernelBlocks = DEFAULT_BLOCKS):
     """Expand-and-filter join of the binding table with pattern matches.
 
     table: (R, V) int32, tmask: (R,); matches: (C, 3), mmask: (C,).
@@ -52,52 +67,55 @@ def join_step(table: jax.Array, tmask: jax.Array, matches: jax.Array,
     Returns (table', tmask', overflow).
     """
     R = table.shape[0]
-    compat = tmask[:, None] & mmask[None, :]
-    for pos, col in shared:
-        compat = compat & (table[:, col, None] == matches[None, :, pos])
+    kind, col = static_kind_col(shared, new, table.shape[1])
+    compat = compat_matrix(table, tmask, matches, mmask,
+                           jnp.asarray(kind), jnp.asarray(col),
+                           backend=backend, blocks=blocks)
 
     if not new:  # semijoin: keep surviving rows once
         keep = tmask & compat.any(axis=1)
         return table, keep, jnp.zeros((), bool)
 
     flat = compat.reshape(-1)
-    order = jnp.argsort(~flat)[:R]
+    order, omask, total = select_cap(flat, R)
     r_idx = order // matches.shape[0]
     c_idx = order % matches.shape[0]
     out = table[r_idx]
-    for pos, col in new:
-        out = out.at[:, col].set(matches[c_idx, pos])
-    omask = flat[order]
-    overflow = jnp.sum(flat) > R
-    return out, omask, overflow
+    for pos, col_ in new:
+        out = out.at[:, col_].set(matches[c_idx, pos])
+    return out, omask, total > R
 
 
 def join_step_sorted(table: jax.Array, tmask: jax.Array, matches: jax.Array,
                      mmask: jax.Array, shared: tuple[tuple[int, int], ...],
                      new: tuple[tuple[int, int], ...], *,
-                     max_per_row: int):
-    """Sort-merge join: sort matches by the first shared key, binary-search a
+                     max_per_row: int, backend: str = "jnp",
+                     blocks: KernelBlocks = DEFAULT_BLOCKS):
+    """Sort-merge join: sort matches by the first shared key, locate a
     contiguous candidate range per table row, expand up to max_per_row
-    candidates per row, verify the remaining shared columns during expansion.
+    candidates per row, verify the remaining shared columns during
+    expansion.
 
-    Replaces the O(R*C) compat matrix with O((R+C) log C + R*max_per_row) and
-    needs no composite-key packing (int32-safe). max_per_row must cover the
-    max fan-out of the FIRST shared key; the overflow flag reports violations.
+    Replaces the O(R*C) compat matrix with O((R+C) log C + R*max_per_row)
+    and needs no composite-key packing (int32-safe). max_per_row must cover
+    the max fan-out of the FIRST shared key; the overflow flag reports
+    violations. Under backend="pallas" the candidate-range location runs in
+    the blocked kg_join kernel (counting formulation, no binary search).
     """
     if not shared or not new:
-        return join_step(table, tmask, matches, mmask, shared, new)
+        return join_step(table, tmask, matches, mmask, shared, new,
+                         backend=backend, blocks=blocks)
 
     R = table.shape[0]
     C = matches.shape[0]
     pos0, col0 = shared[0]
 
-    mkey = jnp.where(mmask, matches[:, pos0], jnp.int32(2 ** 31 - 1))
+    mkey = jnp.where(mmask, matches[:, pos0], jnp.int32(INT_MAX))
     m_order = jnp.argsort(mkey)
     mkey_s = mkey[m_order]
     rkey = table[:, col0]
 
-    lo = jnp.searchsorted(mkey_s, rkey, side="left")
-    hi = jnp.searchsorted(mkey_s, rkey, side="right")
+    lo, hi = join_ranges(mkey_s, rkey, backend=backend, blocks=blocks)
     counts = jnp.where(tmask, hi - lo, 0)
     overflow_fanout = jnp.max(counts) > max_per_row
 
@@ -117,12 +135,5 @@ def join_step_sorted(table: jax.Array, tmask: jax.Array, matches: jax.Array,
     omask_full = pair_ok.reshape(-1)
 
     # compact R*max_per_row -> R
-    order = jnp.argsort(~omask_full)[:R]
-    overflow_cap = jnp.sum(omask_full) > R
-    return out[order], omask_full[order], overflow_fanout | overflow_cap
-
-
-def compact(matches: jax.Array, mask: jax.Array, cap: int):
-    """Keep the first `cap` valid rows (post-gather compaction)."""
-    idx = jnp.argsort(~mask)[:cap]
-    return matches[idx], mask[idx], jnp.sum(mask) > cap
+    order, omask, total = select_cap(omask_full, R)
+    return out[order], omask, overflow_fanout | (total > R)

@@ -8,7 +8,13 @@ Each kernel package ships:
 
 Kernels: jaccard (WawPart distance matrix), flash_attention (LM prefill),
 segment_spmm (GNN message passing), embedding_bag (recsys lookup),
-cin (xDeepFM interaction).
+cin (xDeepFM interaction), kg_scan (fused masked triple-pattern scan for
+the query engines' backend="pallas"), kg_join (blocked merge-join
+candidate ranges + expand-join compat matrix, same backend).
+
+The kg_* kernels' refs delegate to engine/primitives — the deduplicated
+scan/join logic is simultaneously the jnp execution backend and the
+kernel oracle.
 """
 import jax
 

@@ -1,0 +1,137 @@
+"""Blocked merge-join Pallas kernels over per-shard sorted match blocks.
+
+Two kernels back the engine's join variants:
+
+* ``join_ranges_kernel`` — the merge side of the sort-free merge join: for
+  every binding-table row key, locate its candidate range [lo, hi) in each
+  shard block's sorted match keys (the per-shard sort perms materialized by
+  ``engine/batch.shard_perms`` make the keys sorted by construction). A
+  binary search is gather-heavy and serializes on TPU; instead the kernel
+  counts — lo[r] = #{keys < rkey[r]}, hi[r] = #{keys <= rkey[r]} — which on
+  a sorted array is integer-identical to ``jnp.searchsorted`` left/right.
+  The count accumulates tile by tile over the match-column grid axis in a
+  VMEM scratch register, so the kernel is pure VPU compare+reduce work with
+  no gathers and no data-dependent control flow. Seed, expansion, and
+  semijoin steps all consume these ranges: expansion and semijoin share the
+  (row, candidate) windows directly, and the seed step is the degenerate
+  0-column case the engine routes through the fused kg_scan compaction.
+
+* ``compat_matrix_kernel`` — the expand-and-filter (paper-faithful) join's
+  R x C compatibility matrix, tiled: the live-row x live-match outer
+  product fused with up to three shared-position equality predicates whose
+  columns are picked at run time (kind/col are data, one engine serves
+  every plan in a bucket).
+
+VMEM per step at the (256, 512) default tiles: the (br, bc) bool compare
+tile plus operands — well under 1 MiB, leaving the double-buffer headroom
+the guide budget asks for.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ranges_kernel(keys_ref, rkey_ref, lo_ref, hi_ref, acc_lo, acc_hi, *,
+                   n_cblocks: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_lo[...] = jnp.zeros_like(acc_lo)
+        acc_hi[...] = jnp.zeros_like(acc_hi)
+
+    keys = keys_ref[...][0]               # (bc,)
+    rk = rkey_ref[...]                    # (br,)
+    lt = keys[None, :] < rk[:, None]      # (br, bc)
+    eq = keys[None, :] == rk[:, None]
+    acc_lo[...] += jnp.sum(lt, axis=1).astype(jnp.int32)
+    acc_hi[...] += jnp.sum(lt | eq, axis=1).astype(jnp.int32)
+
+    @pl.when(k == n_cblocks - 1)
+    def _():
+        lo_ref[...] = acc_lo[...][None]
+        hi_ref[...] = acc_hi[...][None]
+
+
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def join_ranges_kernel(keys: jax.Array, rkey: jax.Array, *,
+                       block_rows: int = 256, block_cols: int = 512,
+                       interpret: bool = False):
+    """keys: (S_b, C) int32 sorted per row (INT_MAX invalid padding),
+    rkey: (R,) int32 < INT_MAX; C % block_cols == 0, R % block_rows == 0
+    (pad first; see ops.join_ranges). Returns (lo, hi): (S_b, R) int32."""
+    sb, c = keys.shape
+    r = rkey.shape[0]
+    assert c % block_cols == 0 and r % block_rows == 0, \
+        (keys.shape, rkey.shape, block_rows, block_cols)
+    nc = c // block_cols
+    return pl.pallas_call(
+        partial(_ranges_kernel, n_cblocks=nc),
+        grid=(sb, r // block_rows, nc),
+        in_specs=[
+            pl.BlockSpec((1, block_cols), lambda s, i, k: (s, k)),
+            pl.BlockSpec((block_rows,), lambda s, i, k: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows), lambda s, i, k: (s, i)),
+            pl.BlockSpec((1, block_rows), lambda s, i, k: (s, i)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((sb, r), jnp.int32),
+                   jax.ShapeDtypeStruct((sb, r), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((block_rows,), jnp.int32),
+                        pltpu.VMEM((block_rows,), jnp.int32)],
+        interpret=interpret,
+    )(keys, rkey)
+
+
+def _compat_kernel(kind_ref, col_ref, table_ref, tmask_ref, matches_ref,
+                   mmask_ref, out_ref):
+    tb = table_ref[...]                   # (br, V) int32
+    tm = tmask_ref[...]                   # (br,) bool
+    mt = matches_ref[...]                 # (bc, 3) int32
+    mm = mmask_ref[...]                   # (bc,) bool
+    kind = kind_ref[...]                  # (3,) int32
+    col = col_ref[...]                    # (3,) int32
+    v = tb.shape[1]
+    compat = tm[:, None] & mm[None, :]
+    for pos in range(3):
+        cc = jnp.clip(col[pos], 0, v - 1)
+        tv = jax.lax.dynamic_slice(tb, (0, cc), (tb.shape[0], 1))  # (br, 1)
+        compat = compat & jnp.where(kind[pos] == 1,
+                                    tv == mt[None, :, pos], True)
+    out_ref[...] = compat
+
+
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def compat_matrix_kernel(table: jax.Array, tmask: jax.Array,
+                         matches: jax.Array, mmask: jax.Array,
+                         kind: jax.Array, col: jax.Array, *,
+                         block_rows: int = 256, block_cols: int = 512,
+                         interpret: bool = False):
+    """(R, C) bool compat matrix; R % block_rows == 0, C % block_cols == 0
+    (pad first; see ops.compat_matrix)."""
+    r, v = table.shape
+    c = matches.shape[0]
+    assert r % block_rows == 0 and c % block_cols == 0, \
+        (table.shape, matches.shape, block_rows, block_cols)
+    return pl.pallas_call(
+        _compat_kernel,
+        grid=(r // block_rows, c // block_cols),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i, j: (0,)),                  # kind
+            pl.BlockSpec((3,), lambda i, j: (0,)),                  # col
+            pl.BlockSpec((block_rows, v), lambda i, j: (i, 0)),     # table
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),         # tmask
+            pl.BlockSpec((block_cols, 3), lambda i, j: (j, 0)),     # matches
+            pl.BlockSpec((block_cols,), lambda i, j: (j,)),         # mmask
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.bool_),
+        interpret=interpret,
+    )(kind, col, table, tmask, matches, mmask)

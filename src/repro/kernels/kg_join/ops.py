@@ -1,0 +1,87 @@
+"""Public merge-join ops: padding + dispatch for the kg_join kernels."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.engine.primitives import INT_MAX as _INT_MAX
+from repro.kernels import default_interpret
+from repro.kernels.kg_join.kernel import (compat_matrix_kernel,
+                                          join_ranges_kernel)
+from repro.kernels.kg_join.ref import compat_matrix_ref, join_ranges_ref
+
+
+def _pad_to(n: int, block: int) -> tuple[int, int]:
+    """(padded size, effective block): the block shrinks to the array when
+    the array is smaller, so short operands run as a single tile."""
+    b = min(block, max(1, n))
+    return int(np.ceil(n / b)) * b, b
+
+
+def join_ranges(keys, rkey, *, block_rows: int = 256, block_cols: int = 512,
+                interpret: bool | None = None):
+    """Candidate ranges (lo, hi) of each table-row key in the sorted match
+    keys — integer-identical to jnp.searchsorted left/right.
+
+    keys: (C,) or (S_b, C) int32, sorted per row with INT_MAX invalid
+    padding; rkey: (R,) int32, values < INT_MAX (term ids and the -1
+    unbound sentinel both qualify). Column padding reuses INT_MAX (keeps
+    rows sorted and never counts); row padding is sliced off.
+    """
+    keys = jnp.asarray(keys)
+    squeeze = keys.ndim == 1
+    if squeeze:
+        keys = keys[None]
+    sb, c = keys.shape
+    r = rkey.shape[0]
+    cp, bc = _pad_to(c, block_cols)
+    rp, br = _pad_to(r, block_rows)
+    if cp > c:
+        keys = jnp.pad(keys, ((0, 0), (0, cp - c)),
+                       constant_values=_INT_MAX)
+    if rp > r:
+        rkey = jnp.pad(rkey, (0, rp - r))
+    interp = default_interpret() if interpret is None else interpret
+    lo, hi = join_ranges_kernel(keys, jnp.asarray(rkey, jnp.int32),
+                                block_rows=br, block_cols=bc,
+                                interpret=interp)
+    lo, hi = lo[:, :r], hi[:, :r]
+    return (lo[0], hi[0]) if squeeze else (lo, hi)
+
+
+def join_ranges_reference(keys, rkey):
+    return join_ranges_ref(jnp.asarray(keys), jnp.asarray(rkey))
+
+
+def compat_matrix(table, tmask, matches, mmask, kind, col, *,
+                  block_rows: int = 256, block_cols: int = 512,
+                  interpret: bool | None = None):
+    """(R, C) bool expand-join compatibility matrix, tiled in VMEM.
+
+    Row/column padding enters with masks off, so padded slots are
+    incompatible by construction and the slice-back is exact.
+    """
+    r, v = table.shape
+    c = matches.shape[0]
+    rp, br = _pad_to(r, block_rows)
+    cp, bc = _pad_to(c, block_cols)
+    if rp > r:
+        table = jnp.pad(table, ((0, rp - r), (0, 0)))
+        tmask = jnp.pad(tmask, (0, rp - r))
+    if cp > c:
+        matches = jnp.pad(matches, ((0, cp - c), (0, 0)))
+        mmask = jnp.pad(mmask, (0, cp - c))
+    interp = default_interpret() if interpret is None else interpret
+    out = compat_matrix_kernel(table, tmask, matches, mmask,
+                               jnp.asarray(kind, jnp.int32),
+                               jnp.asarray(col, jnp.int32),
+                               block_rows=br, block_cols=bc,
+                               interpret=interp)
+    return out[:r, :c]
+
+
+def compat_matrix_reference(table, tmask, matches, mmask, kind, col):
+    return compat_matrix_ref(jnp.asarray(table), jnp.asarray(tmask),
+                             jnp.asarray(matches), jnp.asarray(mmask),
+                             jnp.asarray(kind), jnp.asarray(col))

@@ -1,0 +1,22 @@
+"""Differential references for the blocked merge-join kernels.
+
+As with kg_scan, the oracle IS the engine's jnp backend
+(`engine/primitives.join_ranges` / `compat_matrix`): one deduplicated
+implementation serves as the execution path and the kernel reference.
+"""
+from __future__ import annotations
+
+from repro.engine.primitives import compat_matrix, join_ranges
+
+
+def join_ranges_ref(keys, rkey):
+    """(lo, hi) candidate ranges: searchsorted left/right of each table-row
+    key into the (per-block) sorted match keys. keys: (C,) or (S_b, C)
+    int32 with INT_MAX invalid padding; rkey: (R,) int32 < INT_MAX."""
+    return join_ranges(keys, rkey, backend="jnp")
+
+
+def compat_matrix_ref(table, tmask, matches, mmask, kind, col):
+    """(R, C) bool expand-join compatibility matrix (see primitives)."""
+    return compat_matrix(table, tmask, matches, mmask, kind, col,
+                         backend="jnp")

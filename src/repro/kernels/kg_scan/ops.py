@@ -1,0 +1,40 @@
+"""Public fused triple-scan op: padding, block stitching, dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.kg_scan.kernel import scan_hits_kernel
+from repro.kernels.kg_scan.ref import scan_hits_ref
+
+
+def scan_hits(triples, valid, spo, eq, *, block_rows: int = 1024,
+              interpret: bool | None = None):
+    """(hit (N,) bool, cum (N,) int32): fused triple-pattern predicate plus
+    inclusive hit-count prefix sum over a padded shard block.
+
+    Pads N up to a block multiple (padded rows are invalid and can never
+    hit); per-block partial sums from the kernel are stitched into the
+    global cumsum with one exclusive-scan-plus-add — int32 adds all the
+    way, so the result is bit-identical to the jnp reference
+    (kg_scan.ref.scan_hits_ref / the engine's jnp backend).
+    """
+    n = triples.shape[0]
+    bn = min(block_rows, n)
+    rem = n % bn
+    if rem:
+        pad = bn - rem
+        triples = jnp.pad(triples, ((0, pad), (0, 0)), constant_values=-1)
+        valid = jnp.pad(valid, (0, pad))
+    interp = default_interpret() if interpret is None else interpret
+    hit, incum, counts = scan_hits_kernel(
+        triples, valid, jnp.asarray(spo, jnp.int32),
+        jnp.asarray(eq, jnp.bool_), block_rows=bn, interpret=interp)
+    offs = jnp.cumsum(counts) - counts              # exclusive block offsets
+    cum = incum + jnp.repeat(offs, bn)
+    return hit[:n], cum[:n]
+
+
+def scan_hits_reference(triples, valid, spo, eq=None):
+    return scan_hits_ref(triples, valid, jnp.asarray(spo, jnp.int32),
+                         None if eq is None else jnp.asarray(eq, jnp.bool_))

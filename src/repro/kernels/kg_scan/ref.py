@@ -1,0 +1,19 @@
+"""Differential reference for the fused triple-scan kernel.
+
+The oracle IS the engine's jnp backend (`engine/primitives.scan_hits`):
+the deduplicated scan logic serves as both the execution path and the
+kernel reference, so a kernel/ref mismatch is by construction an
+engine-level correctness bug.
+"""
+from __future__ import annotations
+
+from repro.engine.primitives import scan_hits
+
+
+def scan_hits_ref(triples, valid, spo, eq=None):
+    """(hit, cum): fused SPO/equality predicate + inclusive hit count.
+
+    triples: (N, 3) int32; valid: (N,) bool; spo: (3,) int32 with -1 =
+    wildcard, -2 = never-match; eq: (3,) bool gates over EQ_PAIRS or None.
+    """
+    return scan_hits(triples, valid, spo, eq, backend="jnp")

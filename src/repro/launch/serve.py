@@ -8,6 +8,11 @@ query plans by shape (see engine/batch.py), compiles one engine per bucket,
 and serves the request stream batch-by-batch, reporting throughput
 (queries/sec) and the compile count per partitioning method.
 
+--backend pallas executes every bucket engine's scan/join primitives
+through the fused Pallas KG kernels (kernels/kg_scan, kernels/kg_join)
+instead of dense jnp ops — bit-identical results, native kernels on TPU,
+interpret mode elsewhere.
+
 --adaptive closes the loop (repro.adaptive): the server tracks the live
 template mix, detects drift against the mix the partitioning was computed
 from, and migrates shards under a triple-movement budget between batches —
@@ -71,6 +76,12 @@ class WorkloadServer:
     within a batch to one scanned instance, fanned back out at delivery —
     `stats` tracks served/executed/deduped counts.
 
+    backend selects the engines' execution backend: "jnp" (dense XLA) or
+    "pallas" (fused kg_scan/kg_join kernels; kernel_blocks sets their tile
+    sizes). Results are bit-identical across backends on every serving
+    path; the backend keys the EngineCache, so two servers sharing one
+    cache with different backends never collide.
+
     adaptive=True (or an AdaptiveConfig) attaches an AdaptiveController
     (repro.adaptive): every routed request feeds a sliding-window workload
     tracker, drift checks run between batches, and a detected drift
@@ -83,11 +94,15 @@ class WorkloadServer:
                  gather_cap: int | None = None,
                  params_spec: dict[str, dict] | None = None,
                  cache: EngineCache | None = None,
-                 mesh=None, dedup: bool = True, adaptive=None):
+                 mesh=None, dedup: bool = True, adaptive=None,
+                 backend: str = "jnp", kernel_blocks=None):
+        from repro.engine.primitives import check_backend
         self.queries = list(queries)
         self.join_impl = join_impl
         self.max_per_row = max_per_row
         self.gather_cap = gather_cap
+        self.backend = backend
+        self.kernel_blocks = check_backend(backend, kernel_blocks)
         self.cache = cache if cache is not None else EngineCache()
         self.mesh = mesh
         self.dedup = dedup
@@ -289,7 +304,9 @@ class WorkloadServer:
     def _engine(self, bucket):
         return self.cache.get(bucket.signature, join_impl=self.join_impl,
                               max_per_row=self.max_per_row,
-                              gather_cap=self.gather_cap, mesh=self.mesh)
+                              gather_cap=self.gather_cap, mesh=self.mesh,
+                              backend=self.backend,
+                              kernel_blocks=self.kernel_blocks)
 
     @contextmanager
     def tracking_paused(self):
@@ -380,6 +397,11 @@ def main() -> None:
     ap.add_argument("--method", choices=("wawpart", "random", "centralized"),
                     default="wawpart")
     ap.add_argument("--join", choices=("expand", "sorted"), default="sorted")
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
+                    help="engine execution backend: dense XLA ops (jnp) or "
+                         "the fused kg_scan/kg_join Pallas kernels (pallas; "
+                         "native on TPU, interpret mode elsewhere — results "
+                         "are bit-identical either way)")
     ap.add_argument("--batch", type=int, default=64,
                     help="requests per serve() call")
     ap.add_argument("--requests", type=int, default=256,
@@ -441,12 +463,13 @@ def main() -> None:
     server = WorkloadServer(queries, part, join_impl=args.join,
                             max_per_row=args.max_per_row or None,
                             mesh=mesh, dedup=not args.no_dedup,
-                            adaptive=adaptive)
+                            adaptive=adaptive, backend=args.backend)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
           f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
           f"{len(queries)} template queries in {server.n_buckets} buckets"
           + (f", shard_map on mesh {dict(mesh.shape)}" if mesh is not None
              else "")
+          + (f", backend={args.backend}" if args.backend != "jnp" else "")
           + (", adaptive" if args.adaptive else ""))
     print(f"  per-bucket collective counts (WawPart cuts): "
           f"{server.collective_counts()}")

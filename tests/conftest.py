@@ -51,6 +51,14 @@ def lubm_small():
 
 
 @pytest.fixture(scope="session")
+def lubm_tiny():
+    """Smaller LUBM for compile-heavy sweeps (e.g. the interpret-mode
+    Pallas backend differentials, whose trace cost grows with shard size)."""
+    from repro.kg.generator import generate_lubm
+    return generate_lubm(1, scale=0.05, seed=0)
+
+
+@pytest.fixture(scope="session")
 def bsbm_small():
     from repro.kg.generator import generate_bsbm
     return generate_bsbm(120, seed=0)

@@ -207,6 +207,31 @@ def test_migrated_server_matches_fresh_server(lubm_small, lubm_parts):
         assert na == nb and np.array_equal(a, b)
 
 
+def test_migrated_server_backend_parity_pallas(lubm_tiny):
+    """ISSUE-4 differential: the adaptive-migration serving path is
+    bit-identical across execution backends — a jnp and a pallas server
+    migrated through the same repartition agree with each other and with a
+    from-scratch pallas server on the new placement."""
+    qs = lubm_queries()
+    wa, wb = two_phase_weights(qs)
+    part = wawpart_partition(lubm_tiny, qs, n_shards=3, query_weights=wa)
+    res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+    stream = request_stream(qs, 16)
+    sj = WorkloadServer(qs, part)
+    sp = WorkloadServer(qs, part, backend="pallas")
+    for (a, na, ova), (p, np_, ovp) in zip(sj.serve(stream),
+                                           sp.serve(stream)):
+        assert na == np_ and ova == ovp and np.array_equal(a, p)
+    sj.migrate(res.part)
+    sp.migrate(res.part)
+    assert sj.epoch == sp.epoch == 1
+    fresh = WorkloadServer(qs, res.part, backend="pallas")
+    for (a, na, ova), (p, np_, ovp), (f, nf, ovf) in zip(
+            sj.serve(stream), sp.serve(stream), fresh.serve(stream)):
+        assert na == np_ == nf and ova == ovp == ovf
+        assert np.array_equal(a, p) and np.array_equal(a, f)
+
+
 def test_migration_reuses_engine_signatures(lubm_parts):
     qs, wa, wb, part = lubm_parts
     res = incremental_repartition(part, qs, wb, budget_frac=0.15)

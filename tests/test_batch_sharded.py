@@ -170,10 +170,67 @@ print("MIGRATE_SHARD_MAP_OK")
 """
 
 
+SCRIPT_PALLAS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.core.partitioner import wawpart_partition
+from repro.engine.batch import (EngineCache, bucket_plans, run_batched,
+                                run_sharded_batched, shard_perms)
+from repro.engine.federated import ShardedKG
+from repro.engine.oracle import evaluate_bgp
+from repro.engine.planner import make_plan
+from repro.kg.generator import generate_lubm
+from repro.kg.workloads import lubm_queries
+from repro.launch.mesh import make_engine_mesh
+from repro.launch.serve import WorkloadServer, request_stream
+
+# backend="pallas" on the shard_map path: per bucket, the kernels run
+# inside the per-device programs and must match the jnp vmap simulation
+# and the host oracle bit-for-bit (ISSUE-4 differential)
+store = generate_lubm(1, scale=0.05, seed=0)
+qs = lubm_queries()
+part = wawpart_partition(store, qs, n_shards=3)
+kg = ShardedKG.build(part)
+buckets = bucket_plans([make_plan(q, part) for q in qs])
+cache = EngineCache()
+perms = shard_perms(kg)
+mesh = jax.make_mesh((3,), ("shards",))
+for b in buckets:
+    rv = run_batched(b, kg, join_impl="sorted", cache=cache, perms=perms)
+    rp = run_sharded_batched(b, kg, mesh, join_impl="sorted", cache=cache,
+                             perms=perms, backend="pallas")
+    for (a, _, ova), (p, _, ovp), plan in zip(rv, rp, b.plans):
+        assert ova == ovp, plan.query.name
+        assert np.array_equal(a, p), plan.query.name
+        assert np.array_equal(a, evaluate_bgp(store, plan.query)), \
+            plan.query.name
+
+# per-query engine on the mesh: run_sharded's pallas path (check_rep skip)
+from repro.engine.federated import run_sharded, run_vmapped
+for q in (qs[0], qs[10]):
+    plan = make_plan(q, part)
+    a = run_vmapped(plan, kg, join_impl="sorted", max_per_row=192)
+    p = run_sharded(plan, kg, mesh, join_impl="sorted", max_per_row=192,
+                    backend="pallas")
+    assert a[2] == p[2] and np.array_equal(a[0], p[0]), q.name
+
+# mesh-routed WorkloadServer end to end on the pallas backend
+stream = request_stream(qs, 16)
+base = WorkloadServer(qs, part, cache=cache)
+sp = WorkloadServer(qs, part, mesh=make_engine_mesh(3), backend="pallas")
+for (a, na, ova), (p, np_, ovp) in zip(base.serve(stream), sp.serve(stream)):
+    assert na == np_ and ova == ovp
+    assert np.array_equal(a, p)
+print("PALLAS_SHARD_MAP_OK")
+"""
+
+
 @pytest.mark.parametrize("script,token", [
     (SCRIPT_DIFF, "BATCH_SHARD_MAP_OK"),
     (SCRIPT_SERVER, "SERVER_SHARD_MAP_OK"),
     (SCRIPT_MIGRATE, "MIGRATE_SHARD_MAP_OK"),
+    (SCRIPT_PALLAS, "PALLAS_SHARD_MAP_OK"),
 ])
 def test_batch_shard_map(script, token):
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}

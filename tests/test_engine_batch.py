@@ -1,5 +1,6 @@
 """Batched serving engine: differential correctness vs the per-query engine
 and the host oracle, bucket/padding invariants, and the compile cache."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -263,3 +264,174 @@ def test_shard_perms_sorted_views(lubm_small):
         for pos in range(3):
             view = kg.triples[s, perms[s, pos], pos]
             assert (np.diff(view) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# execution backends: pallas (fused kg_scan/kg_join kernels) vs jnp vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["expand", "sorted"])
+def test_pallas_backend_differential_all_buckets(lubm_tiny, impl):
+    """backend="pallas" is bit-identical to backend="jnp" (and both equal
+    the host oracle) across every bucket signature of the LUBM workload —
+    results, counts, AND overflow flags."""
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_tiny, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    buckets = bucket_plans([make_plan(q, part) for q in qs])
+    cache = EngineCache()
+    for b in buckets:
+        rj = run_batched(b, kg, join_impl=impl, cache=cache)
+        rp = run_batched(b, kg, join_impl=impl, cache=cache,
+                         backend="pallas")
+        for (a, na, ova), (p, np_, ovp), plan in zip(rj, rp, b.plans):
+            name = plan.query.name
+            assert ova == ovp and na == np_, name
+            assert np.array_equal(a, p), name
+            assert np.array_equal(a, evaluate_bgp(lubm_tiny, plan.query)), \
+                name
+
+
+@pytest.mark.parametrize("impl", ["expand", "sorted"])
+def test_pallas_backend_edge_queries(impl):
+    """The plan shapes most likely to break the kernels: 0-var asks,
+    never-match constants, semijoin steps, intra-pattern equality."""
+    triples = [(f"s{i}", "p", f"o{i % 3}") for i in range(9)]
+    triples += [("s0", "q", "o9")]
+    store = TripleStore.from_string_triples(triples)
+    qs = [
+        Query("ASK-HIT", (T(c("s0"), c("p"), c("o0")),)),
+        Query("ASK-MISS", (T(c("s1"), c("p"), c("o0")),)),
+        Query("UNKNOWN", (T(v("X"), c("nosuch"), v("Y")),)),
+        Query("MIX", (T(v("X"), c("p"), v("Y")),
+                      T(c("s0"), c("q"), c("o9")))),      # semijoin step
+        Query("SELFEQ", (T(v("X"), c("p"), v("X")),)),
+    ]
+    part = wawpart_partition(store, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    cache = EngineCache()
+    for b in bucket_plans([make_plan(q, part) for q in qs]):
+        rj = run_batched(b, kg, join_impl=impl, cache=cache)
+        rp = run_batched(b, kg, join_impl=impl, cache=cache,
+                         backend="pallas")
+        for (a, na, ova), (p, np_, ovp), plan in zip(rj, rp, b.plans):
+            assert ova == ovp and na == np_, plan.query.name
+            assert np.array_equal(a, p), plan.query.name
+            assert np.array_equal(a, evaluate_bgp(store, plan.query)), \
+                plan.query.name
+
+
+def test_pallas_per_query_engine_differential(lubm_tiny):
+    """The per-query engine's backend dispatch (engine/local.py scan_shard /
+    join_step / join_step_sorted through run_vmapped) — not just the
+    batched engine — matches jnp and the oracle on both join impls."""
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_tiny, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    for q in (qs[0], qs[6], qs[10]):     # incl. gather + 3-step plans
+        for impl in ("expand", "sorted"):
+            a = run_vmapped(q_plan := make_plan(q, part), kg, join_impl=impl,
+                            max_per_row=192)
+            p = run_vmapped(q_plan, kg, join_impl=impl, max_per_row=192,
+                            backend="pallas")
+            assert a[2] == p[2] and a[1] == p[1], (q.name, impl)
+            assert np.array_equal(a[0], p[0]), (q.name, impl)
+            assert np.array_equal(a[0], evaluate_bgp(lubm_tiny, q)), \
+                (q.name, impl)
+
+
+def test_pallas_overflow_parity(lubm_tiny):
+    """Capacity overflow must surface identically on both backends: same
+    per-request flags without strict, same CapacityOverflowError with."""
+    from repro.engine.federated import CapacityOverflowError
+
+    qs = [Query("ALL", (T(v("X"), c("rdf:type"), v("Y")),))]
+    part = wawpart_partition(lubm_tiny, qs, n_shards=3)
+    kg = ShardedKG.build(part)
+    ref = make_plan(qs[0], part)
+    squeezed = make_plan(qs[0], part,
+                         capacities=([s.scan_cap for s in ref.steps], 8))
+    (bucket,) = bucket_plans([squeezed])
+    rj = run_batched(bucket, kg)
+    rp = run_batched(bucket, kg, backend="pallas")
+    assert [ovf for _, _, ovf in rj] == [ovf for _, _, ovf in rp]
+    assert any(ovf for _, _, ovf in rp)          # the squeeze does overflow
+    for backend in ("jnp", "pallas"):
+        with pytest.raises(CapacityOverflowError, match="vmapped"):
+            run_batched(bucket, kg, strict=True, backend=backend)
+
+
+def test_engine_cache_keying_jnp_vs_pallas(lubm_tiny):
+    """Regression (ISSUE-4): jnp and pallas engines — and pallas engines
+    with different kernel tile sizes — must never collide in the cache."""
+    from repro.engine.primitives import KernelBlocks
+
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_tiny, qs, n_shards=3)
+    sig = bucket_plans([make_plan(qs[0], part)])[0].signature
+    cache = EngineCache()
+    f_jnp = cache.get(sig)
+    f_pal = cache.get(sig, backend="pallas")
+    assert cache.misses == 2 and f_jnp is not f_pal
+    # defaulted blocks and explicit default blocks are the same key
+    assert cache.get(sig, backend="pallas",
+                     kernel_blocks=KernelBlocks()) is f_pal
+    # a different tiling is a different compiled program
+    f_blk = cache.get(sig, backend="pallas",
+                      kernel_blocks=KernelBlocks(scan_rows=64))
+    assert cache.misses == 3 and f_blk is not f_pal
+    assert cache.get(sig) is f_jnp and cache.get(sig, backend="pallas") is f_pal
+    assert cache.misses == 3 and cache.hits == 3
+    with pytest.raises(ValueError, match="backend"):
+        cache.get(sig, backend="nope")
+    with pytest.raises(ValueError, match="KernelBlocks"):
+        cache.get(sig, backend="pallas", kernel_blocks=(64, 64, 64))
+
+
+def test_kernel_blocks_validation():
+    from repro.engine.primitives import KernelBlocks
+
+    with pytest.raises(ValueError, match="scan_rows"):
+        KernelBlocks(scan_rows=0)
+    with pytest.raises(ValueError, match="join_cols"):
+        KernelBlocks(join_cols=True)
+
+
+# ---------------------------------------------------------------------------
+# compaction edges (engine/primitives.compact, re-exported by engine/local)
+# ---------------------------------------------------------------------------
+
+def test_compact_exactly_at_cap():
+    from repro.engine.local import compact
+
+    m = np.arange(30, dtype=np.int32).reshape(10, 3)
+    mask = np.zeros(10, bool)
+    mask[[1, 4, 7, 9]] = True
+    out, omask, ovf = compact(jnp.asarray(m), jnp.asarray(mask), 4)
+    assert not bool(ovf)                        # exactly cap hits: no loss
+    assert omask.shape == (4,) and np.asarray(omask).all()
+    assert np.array_equal(np.asarray(out), m[[1, 4, 7, 9]])
+
+
+def test_compact_over_cap_flags_overflow():
+    from repro.engine.local import compact
+
+    m = np.arange(30, dtype=np.int32).reshape(10, 3)
+    mask = np.zeros(10, bool)
+    mask[[0, 2, 3, 5, 8]] = True
+    out, omask, ovf = compact(jnp.asarray(m), jnp.asarray(mask), 4)
+    assert bool(ovf)                            # 5 hits > cap 4: truncated
+    assert np.asarray(omask).all()
+    assert np.array_equal(np.asarray(out), m[[0, 2, 3, 5]])  # stable prefix
+
+
+def test_compact_under_cap_pads_dead_rows():
+    from repro.engine.local import compact
+
+    m = np.arange(12, dtype=np.int32).reshape(4, 3)
+    mask = np.asarray([False, True, False, True])
+    out, omask, ovf = compact(jnp.asarray(m), jnp.asarray(mask), 8)
+    assert not bool(ovf)
+    assert out.shape == (8, 3) and omask.shape == (8,)
+    assert np.asarray(omask).tolist() == [True, True] + [False] * 6
+    assert np.array_equal(np.asarray(out)[:2], m[[1, 3]])
