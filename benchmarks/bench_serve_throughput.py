@@ -68,7 +68,12 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
         # each template, so scan-dedup would collapse a 64-batch to 14
         # executed instances and the batch rows would measure dedup, not
         # batching. Dedup gets its own explicitly-labeled row below.
-        server = WorkloadServer(queries, part, dedup=False)
+        # answer_cache=False likewise: _steady replays the same stream, so
+        # the cache would turn iterations 2+ into pure hits and the rows
+        # would measure the cache, not the engines (the cache gets its own
+        # Zipfian section, run_cache).
+        server = WorkloadServer(queries, part, dedup=False,
+                                answer_cache=False)
         base_res = server.serve(stream)
         n_overflow = sum(bool(ovf) for _, _, ovf in base_res)
         assert n_overflow == 0, \
@@ -116,7 +121,8 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
             (server.n_compiles, server.n_buckets)
 
         # -- batch=64 with scan-dedup (identical requests collapse) --------
-        dd = WorkloadServer(queries, part, cache=server.cache)
+        dd = WorkloadServer(queries, part, cache=server.cache,
+                            answer_cache=False)
         dd_res = dd.serve(stream)
         for (a, _, _), (b, _, _) in zip(base_res, dd_res):
             assert np.array_equal(a, b), f"{method}: dedup mismatch"
@@ -137,7 +143,8 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
         if sharded and len(jax.devices()) >= part.n_shards:
             from repro.launch.mesh import make_engine_mesh
             mesh = make_engine_mesh(part.n_shards)
-            sm = WorkloadServer(queries, part, mesh=mesh, dedup=False)
+            sm = WorkloadServer(queries, part, mesh=mesh, dedup=False,
+                                answer_cache=False)
             # honesty check: the distributed path must serve the same
             # solutions as the vmap simulation before its throughput counts
             sm_res = sm.serve(stream)
@@ -162,6 +169,119 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
     return out
 
 
+def run_cache(scale: float = 0.1, n_requests: int = 256, iters: int = 3,
+              n_shards: int = 3, batch: int = 64, zipf_a: float = 1.1,
+              seed: int = 0, sharded: bool = True) -> dict:
+    """Zipfian-stream answer-cache + hot cut-edge replication section.
+
+    A realistic skewed stream over template *instances* (the 14 LUBM
+    templates plus one parameterized Q13 per university): popularity is
+    Zipf-ranked, so a few instances dominate — the regime the answer cache
+    exists for. Reports cache-hit-rate x throughput vs an answer_cache=False
+    server on the same engines, then replicates the hottest safe cut
+    features and reports per-bucket collective counts before/after, with
+    bit-identical-results checks on both the vmap and shard_map paths.
+    """
+    import jax
+    import numpy as np
+
+    from repro.engine.batch import EngineCache
+    from repro.launch.serve import (WorkloadServer, build_dataset,
+                                    build_partition)
+
+    store, queries = build_dataset("lubm", scale)
+    d = store.dictionary
+    part = build_partition("wawpart", store, queries, n_shards)
+    params_spec = {"LUBM-Q13": {(1, 2): 0}}
+    catalog: list = [(q.name, None) for q in queries]
+    unis = [t for t in (f"ub:University{i}" for i in range(64)) if t in d]
+    catalog += [("LUBM-Q13", np.asarray([d.id_of(u)], np.int32))
+                for u in unis]
+    rng = np.random.default_rng(seed)
+    ranks = rng.permutation(len(catalog))        # popularity != template id
+    p = 1.0 / (ranks + 1.0) ** zipf_a
+    idx = rng.choice(len(catalog), size=n_requests, p=p / p.sum())
+    stream = [catalog[int(i)] for i in idx]
+
+    ecache = EngineCache()                       # shared: same engines timed
+    out: dict = {"_meta": {"n_triples": len(store), "n_requests": n_requests,
+                           "n_instances": len(catalog), "zipf_a": zipf_a,
+                           "batch": batch}}
+
+    def serve_all(s):
+        for i in range(0, len(stream), batch):
+            s.serve(stream[i:i + batch])
+
+    results = {}
+    for label, cached in (("nocache", False), ("cache", True)):
+        s = WorkloadServer(queries, part, params_spec=params_spec,
+                           cache=ecache, answer_cache=cached)
+        for i in range(0, len(stream), batch):
+            s.warmup(stream[i:i + batch])
+        s.reset_stats()
+        res = []
+        for i in range(0, len(stream), batch):
+            res.extend(s.serve(stream[i:i + batch]))
+        assert not any(bool(o) for _, _, o in res), f"{label}: overflow"
+        cold = dict(s.stats)
+        dt = _steady(lambda s=s: serve_all(s), iters)
+        lookups = max(1, s.stats["cache_hits"] + s.stats["cache_misses"])
+        out[label] = {
+            "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
+            "hit_rate": s.stats["cache_hits"] / lookups,
+            "cold_hit_rate": cold["cache_hits"] / max(
+                1, cold["cache_hits"] + cold["cache_misses"]),
+            "compiles": s.n_compiles}
+        results[label] = (s, res)
+    out["cache_speedup"] = out["cache"]["qps"] / out["nocache"]["qps"]
+    for a, b in zip(results["cache"][1], results["nocache"][1]):
+        assert np.array_equal(a[0], b[0]) and a[1] == b[1], "cache mismatch"
+
+    # -- hot cut-edge replication: collectives drop, results identical -----
+    s, base_res = results["nocache"]
+    rep = s.replicate_hot()
+    for i in range(0, len(stream), batch):      # recompile changed buckets
+        s.warmup(stream[i:i + batch])
+    rep_res = []
+    for i in range(0, len(stream), batch):
+        rep_res.extend(s.serve(stream[i:i + batch]))
+    for a, b in zip(base_res, rep_res):
+        assert np.array_equal(a[0], b[0]) and a[1] == b[1], \
+            "replication changed results"
+    dt = _steady(lambda: serve_all(s), iters)
+    out["replication"] = {
+        "qps": n_requests / dt,
+        "replicated_units": rep["replicated_units"],
+        "replicated_triples": rep["replicated_triples"],
+        "plans_rewritten": rep["plans_rewritten"],
+        "collectives_before": rep["collectives_before"],
+        "collectives_after": rep["collectives_after"],
+        "vmap_parity": True}
+
+    if sharded and len(jax.devices()) >= n_shards:
+        from repro.launch.mesh import make_engine_mesh
+        mesh = make_engine_mesh(n_shards)
+        sm = WorkloadServer(queries, part, params_spec=params_spec,
+                            mesh=mesh, answer_cache=False)
+        sm_res = []
+        for i in range(0, len(stream), batch):
+            sm_res.extend(sm.serve(stream[i:i + batch]))
+        smrep = sm.replicate_hot()
+        sm2 = []
+        for i in range(0, len(stream), batch):
+            sm2.extend(sm.serve(stream[i:i + batch]))
+        for a, b, c in zip(base_res, sm_res, sm2):
+            assert np.array_equal(a[0], b[0]) and np.array_equal(a[0], c[0]),\
+                "shard_map replication mismatch"
+        out["replication"]["shard_map_parity"] = True
+        out["replication"]["shard_map_collectives_after"] = \
+            smrep["collectives_after"]
+    elif sharded:
+        print(f"serve/cache/shard_map,skipped,need_{n_shards}_devices_have_"
+              f"{len(jax.devices())}", file=sys.stderr)
+    return out
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -172,6 +292,9 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the full result dict as JSON "
                          "(BENCH_serve.json: the cross-PR perf trajectory)")
+    ap.add_argument("--json-cache", metavar="PATH", default=None,
+                    help="run the Zipfian answer-cache + replication section "
+                         "and write its results (BENCH_cache.json)")
     args = ap.parse_args(argv)
 
     sharded = not args.no_sharded
@@ -192,6 +315,28 @@ def main(argv: list[str] | None = None) -> None:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2, sort_keys=True)
         print(f"serve/json,0,wrote_{args.json}", file=sys.stderr)
+
+    if args.json_cache:
+        import json
+        if args.smoke:
+            cres = run_cache(scale=0.05, n_requests=48, iters=1,
+                             batch=16, sharded=sharded)
+        else:
+            cres = run_cache(sharded=sharded)
+        with open(args.json_cache, "w") as f:
+            json.dump(cres, f, indent=2, sort_keys=True)
+        print(f"serve/json,0,wrote_{args.json_cache}", file=sys.stderr)
+        for label in ("nocache", "cache"):
+            r = cres[label]
+            print(f"serve/zipf/{label},{r['us_per_req']:.1f},"
+                  f"qps={r['qps']:.0f};hit_rate={r['hit_rate']:.2f}")
+        rp = cres["replication"]
+        print(f"serve/zipf/cache_speedup,{cres['cache_speedup']:.2f},"
+              f"x_vs_nocache")
+        print(f"serve/zipf/replication,{rp['replicated_triples']},"
+              "collectives="
+              + "|".join(str(c) for c in rp["collectives_before"]) + "->"
+              + "|".join(str(c) for c in rp["collectives_after"]))
 
     res.pop("_meta")
     for method, rows in res.items():

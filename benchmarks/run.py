@@ -12,9 +12,11 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   §Roofline (if results/dryrun.jsonl exists)
 
 The serving, adaptive, and kernel sections also write machine-readable
-``BENCH_serve.json`` / ``BENCH_adaptive.json`` / ``BENCH_kernels.json``
-next to the CSV stream, so the perf trajectory is tracked (and diffable)
-across PRs.
+``BENCH_serve.json`` / ``BENCH_cache.json`` / ``BENCH_adaptive.json`` /
+``BENCH_kernels.json`` next to the CSV stream, so the perf trajectory is
+tracked (and diffable) across PRs. BENCH_cache.json carries the Zipfian
+answer-cache section: hit-rate x throughput vs a cache-disabled server and
+per-bucket collective counts before/after hot cut-edge replication.
 
 ``--dry-run`` imports every bench section and checks its entry point without
 executing any measurement — a fast CI rot-guard for the harness itself.
@@ -67,7 +69,8 @@ def main() -> None:
     bench_lubm.main()
     bench_bsbm.main()
     bench_averages.main()
-    bench_serve_throughput.main(["--json", "BENCH_serve.json"])
+    bench_serve_throughput.main(["--json", "BENCH_serve.json",
+                                 "--json-cache", "BENCH_cache.json"])
     bench_adaptive.main(["--json", "BENCH_adaptive.json"])
     bench_kernels.main(["--json", "BENCH_kernels.json"])
     if os.path.exists("results/dryrun.jsonl"):

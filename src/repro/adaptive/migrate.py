@@ -46,11 +46,18 @@ class MigrationPlan:
         """(src, dst) -> row indices leaving src for dst — what a real
         deployment would put on the wire, shard-pair by shard-pair."""
         diff = np.nonzero(self.old_assign != self.new_assign)[0]
-        out: dict[tuple[int, int], np.ndarray] = {}
-        for r in diff:
-            key = (int(self.old_assign[r]), int(self.new_assign[r]))
-            out.setdefault(key, []).append(r)   # type: ignore[arg-type]
-        return {k: np.asarray(v, dtype=np.int64) for k, v in out.items()}
+        if diff.size == 0:
+            return {}
+        # group rows by their (src, dst) pair in one stable argsort pass
+        src = self.old_assign[diff].astype(np.int64)
+        dst = self.new_assign[diff].astype(np.int64)
+        pair = src * max(1, self.n_shards) + dst
+        order = np.argsort(pair, kind="stable")
+        diff, pair = diff[order].astype(np.int64), pair[order]
+        keys, starts = np.unique(pair, return_index=True)
+        groups = np.split(diff, starts[1:])
+        return {(int(src[order[i]]), int(dst[order[i]])): g
+                for i, g in zip(starts, groups)}
 
     def apply_kg(self, kg: ShardedKG, new: Partitioning, *,
                  pad_multiple: int = 64) -> ShardedKG:
@@ -62,7 +69,8 @@ class MigrationPlan:
         store = new.catalog.store
         if kg.n_shards != self.n_shards:
             return ShardedKG.build(new, pad_multiple=pad_multiple)
-        sizes = [int((self.new_assign == s).sum())
+        extra = new.replica_rows() if new.replicas else {}
+        sizes = [int((self.new_assign == s).sum()) + len(extra.get(s, ()))
                  for s in range(self.n_shards)]
         cap = kg.cap
         if max(sizes) > cap:        # grow in pad_multiple steps; never shrink
@@ -74,7 +82,10 @@ class MigrationPlan:
                               & (self.new_assign == s))[0]
             arrive = np.nonzero((self.new_assign == s)
                                 & (self.old_assign != s))[0]
-            rows = np.concatenate([stay, arrive])
+            parts = [stay, arrive]
+            if s in extra:          # replicated copies ride after primaries
+                parts.append(extra[s])
+            rows = np.concatenate(parts)
             tr[s, :rows.shape[0]] = store.triples[rows]
             va[s, :rows.shape[0]] = True
         return ShardedKG(tr, va, self.n_shards, cap)

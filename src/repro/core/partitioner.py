@@ -46,6 +46,12 @@ class Partitioning:
     shard_sizes: np.ndarray
     method: str = "wawpart"
     meta: dict = field(default_factory=dict)
+    # unit -> extra shards holding a full copy of the unit's triples, on top
+    # of its primary placement (hot cut-edge replication, Harbi et al. /
+    # Peng et al.). assign_triples stays primary-only: replicas ride on top
+    # of the paper's no-replication placement and only ShardedKG.build /
+    # MigrationPlan.apply_kg materialize the copies.
+    replicas: dict[DataUnit, tuple[int, ...]] = field(default_factory=dict)
 
     def feature_shards(self, f: Feature) -> frozenset[int]:
         units = self.catalog.feature_units.get(f)
@@ -66,13 +72,84 @@ class Partitioning:
         return units
 
     def assign_triples(self) -> np.ndarray:
-        """Shard id per triple row (every triple exactly once — no replication)."""
+        """Shard id per triple row (every triple exactly once — no
+        replication). This invariant is load-bearing: migrations diff these
+        arrays, and the engines' cross-shard gathers owner-mask *primary*
+        shards, so a replicated copy must never appear here — `replicas` /
+        `replica_rows` carry the extra copies separately."""
         store = self.catalog.store
         out = np.full(len(store), -1, dtype=np.int32)
         for u, s in self.unit_shard.items():
             rows = self.catalog.rows_of(u)
             out[rows] = s
         return out
+
+    # ---- replication (beyond-paper: hot cut-edge replicas) -------------
+
+    def unit_copies(self, u: DataUnit) -> frozenset[int]:
+        """Every shard holding u's triples: primary placement + replicas."""
+        prim = self.unit_shard.get(u)
+        base = () if prim is None else (prim,)
+        return frozenset(base) | frozenset(self.replicas.get(u, ()))
+
+    def can_replicate(self, u: DataUnit, t: int) -> bool:
+        """Whether a copy of u on shard t is safe for this workload.
+
+        The engines' owner masks are shard-granular: a gather step counts
+        *every* row on an owner shard that matches its scan, so a copy of u
+        on t double-counts exactly when some workload pattern's owner set
+        contains both t and another shard holding u. PO(p,o) scans match
+        only the PO(p,o) unit (single-shard owner sets either way), but a
+        bare P(p) pattern gathers over every shard holding primary p-units —
+        so when the workload contains P(u.p), t must hold no primary unit
+        of that predicate.
+        """
+        if u not in self.unit_shard or not (0 <= t < self.n_shards):
+            return False
+        if self.unit_shard[u] == t:
+            return False
+        if Feature("P", u.p) in self.catalog.feature_units:
+            return not any(s == t for v, s in self.unit_shard.items()
+                           if v.p == u.p)
+        return True
+
+    def with_replicas(self, replicas: dict[DataUnit, tuple[int, ...]]
+                      ) -> "Partitioning":
+        """Copy of this placement with `replicas` merged in (validated
+        against `can_replicate`; a unit never holds two copies on one
+        shard). Same catalog object, so plan/migration unit resolution is
+        shared with the unreplicated placement."""
+        merged = {u: set(ts) for u, ts in self.replicas.items()}
+        for u, ts in replicas.items():
+            for t in ts:
+                if t in merged.get(u, ()):
+                    continue
+                if not self.can_replicate(u, int(t)):
+                    raise ValueError(
+                        f"cannot replicate {u!r} onto shard {t}: not a "
+                        "placed unit, its own primary shard, or unsafe "
+                        "under a bare P-pattern gather")
+                merged.setdefault(u, set()).add(int(t))
+        return Partitioning(
+            self.n_shards, self.unit_shard, self.catalog, self.shard_sizes,
+            method=self.method, meta=self.meta,
+            replicas={u: tuple(sorted(ts)) for u, ts in sorted(merged.items())})
+
+    def replica_rows(self) -> dict[int, np.ndarray]:
+        """shard -> store row indices replicated onto it, in addition to
+        `assign_triples`' primaries (sorted, deterministic)."""
+        acc: dict[int, list[np.ndarray]] = {}
+        for u in sorted(self.replicas):
+            rows = self.catalog.rows_of(u)
+            for t in self.replicas[u]:
+                acc.setdefault(int(t), []).append(rows)
+        return {s: np.sort(np.concatenate(rs)).astype(np.int64)
+                for s, rs in sorted(acc.items())}
+
+    @property
+    def replicated_triples(self) -> int:
+        return sum(self.catalog.sizes.get(u, 0) * len(ts)
+                   for u, ts in self.replicas.items())
 
     def balance_report(self) -> dict:
         mean = float(self.shard_sizes.mean())

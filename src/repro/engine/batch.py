@@ -630,6 +630,25 @@ class EngineCache:
 # batch assembly + execution
 # ---------------------------------------------------------------------------
 
+def canonical_params(pv: np.ndarray | None, n_params: int) -> bytes:
+    """The padded param vector a request executes with, as hashable bytes.
+
+    `assemble_batch` zero-pads every request to the bucket's n_params, so
+    `[5]`, `[5, 0]` and — when n_params is 0 — `None` all execute
+    identically; canonicalizing here keeps dedup and the answer cache keyed
+    on what actually runs. Raises ValueError on vectors longer than the
+    bucket width (they cannot execute at all)."""
+    vec = np.zeros((n_params,), np.int32)
+    if pv is not None:
+        pv = np.asarray(pv, np.int32).reshape(-1)
+        if pv.shape[0] > n_params:
+            raise ValueError(
+                f"request has {pv.shape[0]} params but the bucket executes "
+                f"with n_params={n_params}; extra values would be dropped")
+        vec[:pv.shape[0]] = pv
+    return vec.tobytes()
+
+
 def assemble_batch(bucket: PlanBucket,
                    requests: list[tuple[int, np.ndarray | None]],
                    ) -> tuple[PlanData, jnp.ndarray]:
@@ -640,11 +659,9 @@ def assemble_batch(bucket: PlanBucket,
     stacked = PlanData(*(jnp.asarray(np.stack(
         [getattr(bucket.pdata[idx], f) for idx, _ in requests]))
         for f in PlanData._fields))
-    pvecs = np.zeros((len(requests), P), np.int32)
+    pvecs = np.empty((len(requests), P), np.int32)
     for r, (_, pv) in enumerate(requests):
-        if pv is not None:
-            pv = np.asarray(pv, np.int32).reshape(-1)
-            pvecs[r, :pv.shape[0]] = pv
+        pvecs[r] = np.frombuffer(canonical_params(pv, P), np.int32)
     return stacked, jnp.asarray(pvecs)
 
 
@@ -669,20 +686,28 @@ def extract_batch(bucket: PlanBucket,
     return out
 
 
-def dedup_requests(requests: list[tuple[int, np.ndarray | None]]
+def dedup_requests(requests: list[tuple[int, np.ndarray | None]],
+                   n_params: int | None = None,
                    ) -> tuple[list[tuple[int, np.ndarray | None]], list[int]]:
     """Collapse identical (plan, params) requests to one scanned instance.
 
     Returns (unique, inverse) with requests[i] equivalent to
     unique[inverse[i]] — the engine executes only the unique instances and
     results fan back out at delivery (extract_fanout). A workload stream of
-    many users issuing the same template instance pays for one scan."""
+    many users issuing the same template instance pays for one scan.
+
+    n_params (the bucket width) keys requests on their *padded* param
+    vector, so `[5]` and `[5, 0]` — identical once assemble_batch zero-pads
+    them — collapse too; without it only byte-identical vectors match."""
     seen: dict[tuple[int, bytes | None], int] = {}
     unique: list[tuple[int, np.ndarray | None]] = []
     inverse: list[int] = []
     for idx, pv in requests:
-        key = (idx, None if pv is None
-               else np.asarray(pv, np.int32).tobytes())
+        if n_params is None:
+            raw = None if pv is None else np.asarray(pv, np.int32).tobytes()
+            key = (idx, raw)
+        else:
+            key = (idx, canonical_params(pv, n_params))
         j = seen.get(key)
         if j is None:
             j = seen[key] = len(unique)
@@ -724,7 +749,7 @@ def run_batched(bucket: PlanBucket, kg: ShardedKG,
     check_gather_cap(gather_cap)
     if requests is None:
         requests = [(i, None) for i in range(len(bucket.plans))]
-    exec_reqs, inverse = dedup_requests(requests) if dedup \
+    exec_reqs, inverse = dedup_requests(requests, bucket.n_params) if dedup \
         else (requests, None)
     cache = cache or EngineCache()
     fn = cache.get(bucket.signature, join_impl=join_impl,

@@ -88,16 +88,27 @@ class ShardedKG:
     cap: int
 
     @staticmethod
-    def build(part: Partitioning, *, pad_multiple: int = 64) -> "ShardedKG":
+    def build(part: Partitioning, *, pad_multiple: int = 64,
+              min_cap: int = 0) -> "ShardedKG":
+        """Materialize per-shard triple blocks: each shard's primary rows
+        (`assign_triples`, every triple exactly once) followed by any
+        replicated rows (`part.replica_rows`). min_cap lets a caller keep
+        the pre-replication block shape so compiled engines stay valid."""
         store = part.catalog.store
         assign = part.assign_triples()
         n = part.n_shards
-        sizes = [int((assign == s).sum()) for s in range(n)]
-        cap = max(8, int(np.ceil(max(sizes) / pad_multiple)) * pad_multiple)
+        extra = part.replica_rows() if part.replicas else {}
+        sizes = [int((assign == s).sum()) + len(extra.get(s, ()))
+                 for s in range(n)]
+        cap = max(8, min_cap,
+                  int(np.ceil(max(sizes) / pad_multiple)) * pad_multiple)
         tr = np.full((n, cap, 3), -1, dtype=np.int32)
         va = np.zeros((n, cap), dtype=bool)
         for s in range(n):
             rows = store.triples[assign == s]
+            rep = extra.get(s)
+            if rep is not None:
+                rows = np.concatenate([rows, store.triples[rep]])
             tr[s, :rows.shape[0]] = rows
             va[s, :rows.shape[0]] = True
         return ShardedKG(tr, va, n, cap)

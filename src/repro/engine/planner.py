@@ -146,15 +146,29 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
 
     # ---- shard routing (the paper's rewriter) --------------------------
     homes: list[frozenset[int]] = []
+    pat_units: list[tuple] = []
     for pat in q.patterns:
-        units = part.routing_units(pattern_feature(pat))
-        homes.append(frozenset(part.unit_shard[u] for u in units
-                               if u in part.unit_shard))
+        units = [u for u in part.routing_units(pattern_feature(pat))
+                 if u in part.unit_shard]
+        pat_units.append(tuple(units))
+        homes.append(frozenset(part.unit_shard[u] for u in units))
     counts = [0] * part.n_shards
     for h in homes:
         if len(h) == 1:
             counts[next(iter(h))] += 1
+    # ppn comes from *primary* homes only, so replication never moves a
+    # query's primary shard — unaffected plans stay bit-identical.
     ppn = max(range(part.n_shards), key=lambda s: (counts[s], -s))
+
+    # Replicas can make ppn self-sufficient for a pattern: when every
+    # routing unit has a copy (primary or replica) on ppn, the step scans
+    # ppn alone and the cross-shard gather disappears. Partial coverage
+    # keeps the primary owner set — adding ppn there would double-count.
+    owner_sets = list(homes)
+    if part.replicas:
+        for pi, units in enumerate(pat_units):
+            if units and all(ppn in part.unit_copies(u) for u in units):
+                owner_sets[pi] = frozenset({ppn})
 
     # ---- static capacities from host simulation ------------------------
     if capacities is None:
@@ -205,7 +219,7 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
                 slots.append((pos, col))
         shared = tuple((pos, col) for pos, col in slots if col in bound)
         new = tuple((pos, col) for pos, col in slots if col not in bound)
-        owners = tuple(sorted(homes[pi]))
+        owners = tuple(sorted(owner_sets[pi]))
         gather = not (set(owners) <= {ppn}) if owners else True
         psl = tuple((pos, pidx) for (qpi, pos), pidx in sorted(params.items())
                     if qpi == pi)
@@ -226,8 +240,13 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
                 hit &= tr[:, a] == tr[:, b]
             rows = np.nonzero(hit)[0]
             if rows.size:
-                key = (assign[rows].astype(np.int64) * (len(d) + 2)
-                       + tr[rows, shared[0][0]])
+                if part.replicas:
+                    # a replicated shard can hold more matches per join key
+                    # than any single primary shard — bound globally
+                    key = tr[rows, shared[0][0]].astype(np.int64)
+                else:
+                    key = (assign[rows].astype(np.int64) * (len(d) + 2)
+                           + tr[rows, shared[0][0]])
                 fanout = int(np.unique(key, return_counts=True)[1].max())
         bcap = min(max_cap, _pow2ceil(int(fanout * cap_margin) + 4))
         steps.append(PlanStep(

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import OrderedDict
 from contextlib import contextmanager
 from typing import NamedTuple
 
@@ -32,8 +33,8 @@ from repro.core.features import pattern_feature
 from repro.core.partitioner import (Partitioning, centralized_partition,
                                     random_partition, wawpart_partition)
 from repro.engine.batch import (EngineCache, assemble_batch, bucket_collectives,
-                                bucket_plans, dedup_requests, extract_batch,
-                                extract_fanout, shard_perms)
+                                bucket_plans, canonical_params, dedup_requests,
+                                extract_batch, extract_fanout, shard_perms)
 from repro.engine.federated import ShardedKG
 from repro.engine.planner import make_plan
 from repro.kg.generator import generate_bsbm, generate_lubm
@@ -87,7 +88,17 @@ class WorkloadServer:
     tracker, drift checks run between batches, and a detected drift
     triggers a budgeted incremental repartition (or a full re-run on large
     drift) applied through `migrate()`. `epoch` counts applied migrations.
+
+    answer_cache=True (default; or an int LRU capacity) memoizes final
+    results by (template, canonical padded params): a repeat request skips
+    engine dispatch entirely and returns the cached (solutions, count,
+    overflow). The cache is epoch-versioned — any state swap (`migrate`,
+    `replicate_hot`) bumps the serving epoch and the whole cache drops, so
+    a stale pre-migration answer is never served. `stats` tracks
+    cache_hits/cache_misses; warmup never reads or fills the cache.
     """
+
+    ANSWER_CACHE_CAP = 65536
 
     def __init__(self, queries, part: Partitioning, *,
                  join_impl: str = "sorted", max_per_row: int | None = None,
@@ -95,6 +106,7 @@ class WorkloadServer:
                  params_spec: dict[str, dict] | None = None,
                  cache: EngineCache | None = None,
                  mesh=None, dedup: bool = True, adaptive=None,
+                 answer_cache: bool | int = True,
                  backend: str = "jnp", kernel_blocks=None):
         from repro.engine.primitives import check_backend
         self.queries = list(queries)
@@ -106,9 +118,15 @@ class WorkloadServer:
         self.cache = cache if cache is not None else EngineCache()
         self.mesh = mesh
         self.dedup = dedup
-        self.stats = {"served": 0, "executed": 0, "deduped": 0}
+        self.stats = {"served": 0, "executed": 0, "deduped": 0,
+                      "cache_hits": 0, "cache_misses": 0}
         self.params_spec = params_spec or {}
         self._track = True
+        self.answer_cache_cap = (self.ANSWER_CACHE_CAP if answer_cache is True
+                                 else int(answer_cache))
+        self._answers: OrderedDict[tuple, tuple] = OrderedDict()
+        self._answers_epoch = 0
+        self._cache_bypass = False
 
         plans = {q.name: make_plan(q, part,
                                    params=self.params_spec.get(q.name))
@@ -236,6 +254,8 @@ class WorkloadServer:
         old_sigs = {b.signature for b in st.buckets}
         new_sigs = {b.signature for b in new_state.buckets}
         self._state = new_state
+        self._answers.clear()        # every cached answer is pre-migration
+        self._answers_epoch = new_state.epoch
         return {"epoch": new_state.epoch, "n_moved": mig.n_moved,
                 "moved_fraction": mig.moved_fraction,
                 "plans_rewritten": rewritten,
@@ -243,6 +263,77 @@ class WorkloadServer:
                 "signatures_reused": len(new_sigs & old_sigs),
                 "signatures_new": len(new_sigs - old_sigs),
                 "cap_grew": kg.cap > st.kg.cap}
+
+    # ---- hot cut-edge replication --------------------------------------
+
+    def replicate_hot(self, query_weights: dict[str, float] | None = None, *,
+                      top_k: int = 4, budget_frac: float = 0.25) -> dict:
+        """Replicate the workload's hottest safe cut features onto their
+        queries' primary shards, removing those cross-shard gathers.
+
+        query_weights defaults to the adaptive tracker's live window (when
+        attached and non-empty), then the partitioning's recorded workload
+        weights, then uniform. Sequencing mirrors `migrate`: the ShardedKG
+        is rebuilt with replica rows appended (old block capacity kept when
+        they fit in the padding, so unchanged engines keep their shapes),
+        only the affected queries re-plan (capacities reused), and the
+        epoch bump atomically swaps the state and drops the answer cache.
+        Results stay bit-identical — replication only changes *where* a
+        step's rows are read, never which rows exist (see
+        Partitioning.can_replicate for the no-double-count rule).
+        """
+        from repro.adaptive.replicate import plan_hot_replication
+
+        st = self._state
+        if query_weights is None and self.adaptive is not None:
+            snap = self.adaptive.tracker.snapshot()
+            if snap.total:
+                query_weights = dict(snap.counts)
+        if query_weights is None:
+            # falls through to uniform when the partitioning was built
+            # without a recorded workload mix (meta stores {} then)
+            query_weights = st.part.meta.get("query_weights") or None
+
+        report = plan_hot_replication(st.part, self.queries, query_weights,
+                                      top_k=top_k, budget_frac=budget_frac)
+        before = self.collective_counts()
+        out = {"epoch": st.epoch, "replicated_units": 0,
+               "replicated_triples": 0, "plans_rewritten": 0,
+               "queries_affected": [],
+               "collectives_before": before, "collectives_after": before,
+               "cap_grew": False}
+        if not report.replicas:
+            return out
+
+        new_part = st.part.with_replicas(report.replicas)
+        kg = ShardedKG.build(new_part, min_cap=st.kg.cap)
+        affected = {name for c in report.chosen for name in c.queries}
+        plans: dict = {}
+        rewritten = 0
+        for q in self.queries:
+            old_plan = st.plans[q.name]
+            if q.name not in affected:
+                plans[q.name] = old_plan
+                continue
+            caps = ([s.scan_cap for s in old_plan.steps], old_plan.table_cap)
+            plans[q.name] = make_plan(q, new_part,
+                                      params=self.params_spec.get(q.name),
+                                      capacities=caps)
+            rewritten += 1
+
+        new_state = self._build_state(st.epoch + 1, new_part, kg, plans)
+        self._state = new_state
+        self._answers.clear()        # pre-replication answers are stale
+        self._answers_epoch = new_state.epoch
+        out.update(
+            epoch=new_state.epoch,
+            replicated_units=sum(len(ts) for ts in report.replicas.values()),
+            replicated_triples=report.total_triples,
+            plans_rewritten=rewritten,
+            queries_affected=sorted(affected),
+            collectives_after=self.collective_counts(),
+            cap_grew=kg.cap > st.kg.cap)
+        return out
 
     # ---- serving -------------------------------------------------------
 
@@ -259,20 +350,40 @@ class WorkloadServer:
         import jax
 
         st = self._state
+        # lazy epoch check backs the eager clears in migrate/replicate_hot:
+        # any state swap makes every cached answer stale at once
+        if self._answers and self._answers_epoch != st.epoch:
+            self._answers.clear()
+        self._answers_epoch = st.epoch
+        use_cache = self.answer_cache_cap > 0 and not self._cache_bypass
+
         track = self.adaptive is not None and self._track
-        by_bucket: dict[int, list[tuple[int, int, np.ndarray | None]]] = {}
+        results: list = [None] * len(requests)
+        by_bucket: dict[int, list] = {}
         for r, (name, pv) in enumerate(requests):
             bi, pi = st.route[name]
-            by_bucket.setdefault(bi, []).append((r, pi, pv))
+            # cache hits still feed the tracker: drift detection must see
+            # the real mix even at high hit rates
             if track:
                 self.adaptive.record(name, st.buckets[bi].plans[pi])
+            key = None
+            if use_cache:
+                key = (name, canonical_params(pv, st.buckets[bi].n_params))
+                hit = self._answers.get(key)
+                if hit is not None:
+                    self._answers.move_to_end(key)
+                    results[r] = hit
+                    self.stats["served"] += 1
+                    self.stats["cache_hits"] += 1
+                    continue
+                self.stats["cache_misses"] += 1
+            by_bucket.setdefault(bi, []).append((r, pi, pv, key))
 
-        results: list = [None] * len(requests)
         for bi, items in by_bucket.items():
             bucket = st.buckets[bi]
-            reqs = [(pi, pv) for _, pi, pv in items]
+            reqs = [(pi, pv) for _, pi, pv, _ in items]
             if self.dedup:
-                unique, inverse = dedup_requests(reqs)
+                unique, inverse = dedup_requests(reqs, bucket.n_params)
             else:
                 unique, inverse = reqs, None
             # pad the batch axis to a power of two: per-bucket batch sizes
@@ -295,8 +406,12 @@ class WorkloadServer:
             self.stats["served"] += len(items)
             self.stats["executed"] += len(unique)
             self.stats["deduped"] += len(items) - len(unique)
-            for (r, _, _), res in zip(items, extracted):
+            for (r, _, _, key), res in zip(items, extracted):
                 results[r] = res
+                if key is not None and key not in self._answers:
+                    self._answers[key] = res
+                    if len(self._answers) > self.answer_cache_cap:
+                        self._answers.popitem(last=False)
         if track:
             self.adaptive.maybe_adapt()
         return results
@@ -321,12 +436,19 @@ class WorkloadServer:
     def warmup(self, requests) -> None:
         """Compile every bucket the request stream touches. Warmup requests
         do not feed the workload tracker — replaying the stream to compile
-        shapes must not look like served traffic."""
-        with self.tracking_paused():
-            self.serve(requests)
+        shapes must not look like served traffic — and bypass the answer
+        cache entirely (no reads, no fills: a pre-warmed cache would make
+        steady-state measurements all-hit)."""
+        bypass, self._cache_bypass = self._cache_bypass, True
+        try:
+            with self.tracking_paused():
+                self.serve(requests)
+        finally:
+            self._cache_bypass = bypass
 
     def reset_stats(self) -> None:
-        self.stats = {"served": 0, "executed": 0, "deduped": 0}
+        self.stats = {"served": 0, "executed": 0, "deduped": 0,
+                      "cache_hits": 0, "cache_misses": 0}
 
 
 def build_dataset(dataset: str, scale: float, seed: int = 0):
@@ -347,13 +469,15 @@ def build_partition(method: str, store, queries, n_shards: int,
 
 def request_stream(queries, n_requests: int, *,
                    weights: dict[str, float] | None = None,
-                   seed: int = 0) -> list[tuple[str, np.ndarray | None]]:
+                   seed: int | np.random.SeedSequence = 0,
+                   ) -> list[tuple[str, np.ndarray | None]]:
     """Request stream over the workload's template queries.
 
     weights=None keeps the historical deterministic round-robin. With
     weights ({template name: relative frequency}), requests are sampled
-    i.i.d. from the normalized distribution using the explicit seed — the
-    realistic skewed traffic the adaptive subsystem exists for.
+    i.i.d. from the normalized distribution using the explicit seed (an
+    int or a spawned SeedSequence) — the realistic skewed traffic the
+    adaptive subsystem exists for.
     """
     if weights is None:
         return [(queries[i % len(queries)].name, None)
@@ -370,11 +494,13 @@ def request_stream(queries, n_requests: int, *,
 def drifting_stream(queries, phases: list[tuple[int, dict[str, float]]], *,
                     seed: int = 0) -> list[tuple[str, np.ndarray | None]]:
     """Concatenated weighted phases: [(n_requests, weights), ...] — the
-    template mix shifts at each phase boundary. Each phase draws from its
-    own derived seed so streams are reproducible end-to-end."""
+    template mix shifts at each phase boundary. Per-phase seeds are spawned
+    from one SeedSequence: `seed + k` would make phase k of seed s collide
+    with phase k-1 of seed s+1, so "independent" streams shared samples."""
     out: list[tuple[str, np.ndarray | None]] = []
-    for k, (n, w) in enumerate(phases):
-        out.extend(request_stream(queries, n, weights=w, seed=seed + k))
+    children = np.random.SeedSequence(seed).spawn(len(phases))
+    for (n, w), child in zip(phases, children):
+        out.extend(request_stream(queries, n, weights=w, seed=child))
     return out
 
 
@@ -415,6 +541,12 @@ def main() -> None:
                          "per shard) instead of the vmap simulation")
     ap.add_argument("--no-dedup", action="store_true",
                     help="disable scan-dedup of identical batch requests")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the epoch-versioned answer cache")
+    ap.add_argument("--replicate", action="store_true",
+                    help="after warmup, replicate the hottest safe cut "
+                         "features onto their queries' primary shards "
+                         "(removes those cross-shard gathers)")
     ap.add_argument("--adaptive", action="store_true",
                     help="track the live workload, detect drift, and migrate "
                          "shards under a budget between batches")
@@ -463,7 +595,8 @@ def main() -> None:
     server = WorkloadServer(queries, part, join_impl=args.join,
                             max_per_row=args.max_per_row or None,
                             mesh=mesh, dedup=not args.no_dedup,
-                            adaptive=adaptive, backend=args.backend)
+                            adaptive=adaptive, backend=args.backend,
+                            answer_cache=not args.no_cache)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
           f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
           f"{len(queries)} template queries in {server.n_buckets} buckets"
@@ -479,6 +612,15 @@ def main() -> None:
     # migration recompiles only changed bucket signatures, mid-stream)
     for i in range(0, len(stream), args.batch):
         server.warmup(stream[i:i + args.batch])
+
+    if args.replicate:
+        rep = server.replicate_hot()
+        print(f"  replicated {rep['replicated_units']} unit copies "
+              f"({rep['replicated_triples']} triples), rewrote "
+              f"{rep['plans_rewritten']} plans; collectives "
+              f"{rep['collectives_before']} -> {rep['collectives_after']}")
+        for i in range(0, len(stream), args.batch):
+            server.warmup(stream[i:i + args.batch])
 
     server.reset_stats()
     t0 = time.perf_counter()
@@ -500,6 +642,10 @@ def main() -> None:
     print(f"  solutions={n_solutions:,}  overflows={overflows}  "
           f"compiled engines={server.n_compiles}{per_epoch}  "
           f"dedup: {st['executed']}/{st['served']} instances executed")
+    if st["cache_hits"] or st["cache_misses"]:
+        total = st["cache_hits"] + st["cache_misses"]
+        print(f"  answer cache: {st['cache_hits']}/{total} hits "
+              f"({st['cache_hits']/max(1, total):.0%})")
     if server.adaptive is not None:
         print(f"  adaptive: epoch={server.epoch}, "
               f"{server.adaptive.n_migrations} migrations")

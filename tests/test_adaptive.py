@@ -178,6 +178,31 @@ def test_migration_plan_deltas_consistent(lubm_small, lubm_parts):
         assert np.array_equal(got, want), s
 
 
+def test_shard_deltas_round_trip_to_apply_kg(lubm_small, lubm_parts):
+    """Replaying the wire deltas against the old blocks reproduces exactly
+    apply_kg's shard contents: old rows - departures + arrivals, per shard.
+    (Also pins the vectorized grouping: ndarray values, row-sorted.)"""
+    qs, wa, wb, part = lubm_parts
+    res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+    mig = MigrationPlan.build(part, res.part)
+    deltas = mig.shard_deltas()
+    assert deltas and all(isinstance(v, np.ndarray) and v.dtype == np.int64
+                          and (np.diff(v) > 0).all()
+                          for v in deltas.values())
+    kg_new = mig.apply_kg(ShardedKG.build(part), res.part)
+    store = part.catalog.store
+    for s in range(part.n_shards):
+        rows = set(np.nonzero(mig.old_assign == s)[0].tolist())
+        for (src, dst), d in deltas.items():
+            if src == s:
+                rows -= set(d.tolist())
+            if dst == s:
+                rows |= set(d.tolist())
+        want = np.sort(store.triples[sorted(rows)], axis=0)
+        got = np.sort(kg_new.triples[s][kg_new.valid[s]], axis=0)
+        assert np.array_equal(got, want), s
+
+
 def test_migrated_server_matches_fresh_server(lubm_small, lubm_parts):
     """(b): after migrate(), every bucket engine's results equal a
     from-scratch WorkloadServer on the new partitioning (vmap path)."""
@@ -311,8 +336,21 @@ def test_request_stream_weighted_and_drifting(lubm_parts):
     assert n_heavy > 300                       # 8:0.5 mix -> ~94% heavy
     with pytest.raises(ValueError, match="zero total mass"):
         request_stream(qs, 4, weights={q.name: 0.0 for q in qs})
-    # drifting: phases concatenate with derived seeds
+    # drifting: phases concatenate with SeedSequence-spawned seeds
     st = drifting_stream(qs, [(50, wa), (50, wb)], seed=3)
     assert len(st) == 100
-    assert st[:50] == request_stream(qs, 50, weights=wa, seed=3)
-    assert st[50:] == request_stream(qs, 50, weights=wb, seed=4)
+    kids = np.random.SeedSequence(3).spawn(2)
+    assert st[:50] == request_stream(qs, 50, weights=wa, seed=kids[0])
+    assert st[50:] == request_stream(qs, 50, weights=wb, seed=kids[1])
+    assert st == drifting_stream(qs, [(50, wa), (50, wb)], seed=3)
+
+
+def test_drifting_stream_seeds_do_not_collide(lubm_parts):
+    """seed+k per phase made phase k of seed s equal phase k-1 of seed s+1:
+    "independent" streams shared samples. Spawned seeds must not."""
+    qs, wa, _wb, part = lubm_parts
+    a = drifting_stream(qs, [(80, wa), (80, wa)], seed=0)
+    b = drifting_stream(qs, [(80, wa), (80, wa)], seed=1)
+    assert a[80:] != b[:80]         # the old collision pair
+    assert a[:80] != a[80:]         # same weights, distinct phase seeds
+    assert a != b

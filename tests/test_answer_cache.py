@@ -1,0 +1,184 @@
+"""Answer-cache semantics + hot cut-edge replication correctness.
+
+The two serving-layer invariants this file owns:
+  * the epoch-versioned answer cache is invisible in results — hits are
+    bit-identical to a cache-disabled server, and any epoch bump (migrate,
+    replicate_hot) drops every cached answer, so a stale pre-migration
+    answer is never served;
+  * replication only removes collectives, never changes results — the
+    replicated copies must not double-count rows (the np.unique in
+    extract_batch would silently hide duplicates, so the raw pre-unique
+    table is checked too).
+"""
+import numpy as np
+import pytest
+
+from repro.core.partitioner import wawpart_partition
+from repro.engine.federated import ShardedKG, make_engine
+from repro.engine.planner import make_plan
+from repro.kg.workloads import lubm_queries
+from repro.launch.serve import WorkloadServer, request_stream
+
+
+@pytest.fixture(scope="module")
+def lubm_served(lubm_small):
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    return qs, part
+
+
+def test_cache_hit_after_repeat_and_parity_with_disabled(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part)
+    off = WorkloadServer(qs, part, answer_cache=False, cache=srv.cache)
+    stream = request_stream(qs, 20)
+    r1 = srv.serve(stream)
+    assert srv.stats["cache_hits"] == 0
+    assert srv.stats["cache_misses"] == 20
+    r2 = srv.serve(stream)
+    assert srv.stats["cache_hits"] == 20       # every repeat skips dispatch
+    r_off = off.serve(stream)
+    assert off.stats["cache_hits"] == off.stats["cache_misses"] == 0
+    for a, b, c in zip(r1, r2, r_off):
+        assert np.array_equal(a[0], b[0]) and a[1] == b[1] and a[2] == b[2]
+        assert np.array_equal(a[0], c[0]) and a[1] == c[1] and a[2] == c[2]
+
+
+def test_cache_hits_skip_engine_dispatch(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part)
+    stream = request_stream(qs, 14)
+    srv.serve(stream)
+    executed = srv.stats["executed"]
+    srv.serve(stream)
+    assert srv.stats["executed"] == executed   # all-hit batch: no dispatch
+    assert srv.stats["cache_hits"] == 14
+
+
+def test_warmup_never_reads_or_fills_cache(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part)
+    stream = request_stream(qs, 8)
+    srv.warmup(stream)
+    assert srv.stats["cache_hits"] == srv.stats["cache_misses"] == 0
+    srv.reset_stats()
+    srv.serve(stream)
+    assert srv.stats["cache_hits"] == 0        # warmup filled nothing
+    srv.warmup(stream)
+    assert srv.stats["cache_hits"] == 0        # and reads nothing
+
+
+def test_lru_capacity_bounds_cache(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part, answer_cache=2)
+    stream = [(qs[i].name, None) for i in range(4)]
+    srv.serve(stream)
+    assert len(srv._answers) == 2              # LRU evicted the older half
+    srv.serve([stream[3]])
+    assert srv.stats["cache_hits"] == 1
+    srv.serve([stream[0]])                     # evicted: must re-miss
+    assert srv.stats["cache_misses"] == 5
+
+
+def test_migrate_epoch_bump_invalidates_cache(lubm_small, lubm_served):
+    """Stale pre-migration answers are never served: after migrate() every
+    request re-executes against the new placement, and results equal a
+    from-scratch server on the new partitioning."""
+    from repro.adaptive.repartition import incremental_repartition
+    from repro.launch.serve import two_phase_weights
+
+    qs, part = lubm_served
+    _wa, wb = two_phase_weights(qs)
+    srv = WorkloadServer(qs, part)
+    stream = request_stream(qs, 14)
+    srv.serve(stream)
+    srv.serve(stream)
+    assert srv.stats["cache_hits"] == 14
+    res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+    srv.migrate(res.part)
+    assert srv.epoch == 1
+    srv.reset_stats()
+    after = srv.serve(stream)
+    assert srv.stats["cache_hits"] == 0        # fully invalidated
+    assert srv.stats["cache_misses"] == 14
+    fresh = WorkloadServer(qs, res.part, answer_cache=False,
+                           cache=srv.cache).serve(stream)
+    for a, b in zip(after, fresh):
+        assert np.array_equal(a[0], b[0]) and a[1] == b[1]
+    srv.serve(stream)
+    assert srv.stats["cache_hits"] == 14       # refilled post-migration
+
+
+def test_replicate_hot_drops_collectives_keeps_results(lubm_served):
+    """The tentpole differential: after hot cut-edge replication at least
+    one bucket's collective count strictly drops, the epoch bump
+    invalidates the cache, and every result stays bit-identical."""
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part)
+    stream = request_stream(qs, 28)
+    before = srv.serve(stream)
+    srv.serve(stream)
+    assert srv.stats["cache_hits"] == 28
+    rep = srv.replicate_hot()
+    assert srv.epoch == 1 and rep["epoch"] == 1
+    assert rep["replicated_triples"] > 0
+    assert rep["plans_rewritten"] > 0
+    drops = [b - a for b, a in zip(rep["collectives_before"],
+                                   rep["collectives_after"])]
+    assert all(d >= 0 for d in drops) and any(d > 0 for d in drops)
+    srv.reset_stats()
+    after = srv.serve(stream)
+    assert srv.stats["cache_hits"] == 0        # epoch bump dropped the cache
+    for a, b in zip(before, after):
+        assert np.array_equal(a[0], b[0]) and a[1] == b[1]
+
+
+def test_replicated_results_bit_identical_jnp_and_pallas(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part, answer_cache=False)
+    stream = request_stream(qs, len(qs))
+    base = srv.serve(stream)
+    srv.replicate_hot()
+    pal = WorkloadServer(qs, srv.part, backend="pallas", answer_cache=False,
+                         params_spec=srv.params_spec)
+    for a, b in zip(base, pal.serve(stream)):
+        assert np.array_equal(a[0], b[0]) and a[1] == b[1]
+
+
+def test_replicated_triples_never_duplicate_result_rows(lubm_served):
+    """Regression for the np.unique path: extract would silently collapse a
+    double-counted binding, so check the *raw* pre-unique table — every
+    solution row must appear exactly once on the PPN shard, with and
+    without replication."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.adaptive.replicate import plan_hot_replication
+    from repro.engine.oracle import evaluate_bgp
+
+    qs, part = lubm_served
+    report = plan_hot_replication(part, qs)
+    assert report.replicas
+    part2 = part.with_replicas(report.replicas)
+    kg2 = ShardedKG.build(part2)
+    affected = {name for c in report.chosen for name in c.queries}
+    assert affected
+    for q in qs:
+        if q.name not in affected:
+            continue
+        plan = make_plan(q, part2)
+        assert plan.n_gathers < make_plan(q, part).n_gathers
+        # the covered step's ppn-local scan carries the *global* join
+        # fan-out (all copies on one shard): widen the merge-join window
+        eng = make_engine(plan, join_impl="sorted", max_per_row=256)
+        fn = jax.jit(jax.vmap(eng, in_axes=(0, 0, None), axis_name="shards"))
+        table, mask, ovf = fn(jnp.asarray(kg2.triples),
+                              jnp.asarray(kg2.valid),
+                              jnp.zeros((max(1, plan.n_params),), jnp.int32))
+        assert not bool(np.asarray(ovf[plan.ppn]))
+        raw = np.asarray(table[plan.ppn])[np.asarray(mask[plan.ppn])]
+        raw = raw[:, :plan.n_vars]
+        uniq, counts = np.unique(raw, axis=0, return_counts=True)
+        assert counts.max() == 1, f"{q.name}: duplicated result rows"
+        assert np.array_equal(uniq, evaluate_bgp(part.catalog.store, q)), \
+            q.name

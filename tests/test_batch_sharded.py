@@ -226,11 +226,64 @@ print("PALLAS_SHARD_MAP_OK")
 """
 
 
+SCRIPT_REPLICATE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.partitioner import wawpart_partition
+from repro.engine.batch import (assemble_batch, bucket_collectives,
+                                count_hlo_collectives)
+from repro.kg.generator import generate_lubm
+from repro.kg.workloads import lubm_queries
+from repro.launch.mesh import make_engine_mesh
+from repro.launch.serve import WorkloadServer, request_stream
+
+# hot cut-edge replication on a real mesh (ISSUE-6 tentpole differential):
+# after replicate_hot() the per-bucket collective counts AND the lowered
+# programs' all_gather counts strictly drop for at least one bucket, while
+# every served result stays bit-identical on the shard_map and vmap paths
+store = generate_lubm(1, scale=0.08, seed=0)
+qs = lubm_queries()
+part = wawpart_partition(store, qs, n_shards=3)
+stream = request_stream(qs, 32)
+
+def hlo_counts(server):
+    out = []
+    for b in server.buckets:
+        fn = server._engine(b)
+        pd, params = assemble_batch(b, [(0, None)])
+        text = fn.lower(server._state.tr, server._state.va,
+                        server._state.perms, pd, params).as_text()
+        n = count_hlo_collectives(text)
+        assert n == 2 * bucket_collectives(b.signature), b.signature
+        out.append(n)
+    return out
+
+sm = WorkloadServer(qs, part, mesh=make_engine_mesh(3))
+vm = WorkloadServer(qs, part, cache=sm.cache)
+before = sm.serve(stream)
+hlo_before = hlo_counts(sm)
+rep = sm.replicate_hot()
+assert sm.epoch == 1 and rep["replicated_triples"] > 0, rep
+assert sum(rep["collectives_after"]) < sum(rep["collectives_before"]), rep
+hlo_after = hlo_counts(sm)
+assert sum(hlo_after) < sum(hlo_before), (hlo_before, hlo_after)
+vm.replicate_hot()
+after = sm.serve(stream)
+after_vm = vm.serve(stream)
+for (a, na, ova), (b, nb, ovb), (c_, nc, _) in zip(before, after, after_vm):
+    assert na == nb == nc and ova == ovb
+    assert np.array_equal(a, b) and np.array_equal(a, c_)
+print("REPLICATE_SHARD_MAP_OK")
+"""
+
+
 @pytest.mark.parametrize("script,token", [
     (SCRIPT_DIFF, "BATCH_SHARD_MAP_OK"),
     (SCRIPT_SERVER, "SERVER_SHARD_MAP_OK"),
     (SCRIPT_MIGRATE, "MIGRATE_SHARD_MAP_OK"),
     (SCRIPT_PALLAS, "PALLAS_SHARD_MAP_OK"),
+    (SCRIPT_REPLICATE, "REPLICATE_SHARD_MAP_OK"),
 ])
 def test_batch_shard_map(script, token):
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}

@@ -220,6 +220,63 @@ def test_scan_dedup_requests_collapse_and_fan_out(lubm_small):
         assert np.array_equal(ra, rb)
 
 
+def test_dedup_collapses_padded_equivalent_params(lubm_small):
+    """[5] and [5, 0] zero-pad to the same executed vector (and None equals
+    all-zeros): with the bucket width, dedup must collapse them — raw-bytes
+    hashing executed the same padded request twice."""
+    from repro.engine.batch import canonical_params
+
+    qs = lubm_queries()
+    d = lubm_small.dictionary
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    template = qs[12]
+    # two param slots (both object positions), so a 1-wide vector zero-pads
+    plan = make_plan(template, part, params={(1, 2): 0, (0, 2): 1},
+                     cap_margin=4.0)
+    (bucket,) = bucket_plans([plan])
+    assert bucket.n_params == 2
+    uid = next(d.id_of(t) for t in (f"ub:University{i}" for i in range(4))
+               if t in d and d.id_of(t) != 0)
+    requests = [(0, np.asarray([uid], np.int32)),
+                (0, np.asarray([uid, 0], np.int32)),
+                (0, np.asarray([0], np.int32)),
+                (0, None)]
+    # without the width only byte-identical vectors match (legacy behavior)
+    unique, _ = dedup_requests(requests)
+    assert len(unique) == 4
+    unique, inverse = dedup_requests(requests, bucket.n_params)
+    assert len(unique) == 2 and inverse == [0, 0, 1, 1]
+    assert canonical_params(None, 2) == canonical_params(
+        np.zeros(2, np.int32), 2)
+    kg = ShardedKG.build(part)
+    naive = run_batched(bucket, kg, requests, join_impl="sorted")
+    deduped = run_batched(bucket, kg, requests, join_impl="sorted",
+                          dedup=True)
+    for (ra, na, _), (rb, nb, _) in zip(naive, deduped):
+        assert na == nb and np.array_equal(ra, rb)
+
+
+def test_oversized_params_raise_clear_error(lubm_small):
+    """A param vector wider than the bucket executes nothing it claims to:
+    assemble_batch must raise a ValueError naming the widths, not NumPy's
+    opaque broadcast error."""
+    from repro.engine.batch import assemble_batch, canonical_params
+
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    template = qs[12]
+    plan = make_plan(template, part, params={(1, 2): 0}, cap_margin=4.0)
+    (bucket,) = bucket_plans([plan])
+    assert bucket.n_params == 1
+    bad = [(0, np.asarray([1, 2, 3], np.int32))]
+    with pytest.raises(ValueError, match="3 params.*n_params=1"):
+        assemble_batch(bucket, bad)
+    with pytest.raises(ValueError, match="n_params"):
+        canonical_params(np.asarray([1, 2], np.int32), 1)
+    with pytest.raises(ValueError, match="n_params"):
+        dedup_requests(bad, bucket.n_params)
+
+
 def test_server_scan_dedup_stats_and_equality(lubm_small):
     """WorkloadServer with dedup executes fewer instances than it serves and
     returns exactly the no-dedup results."""

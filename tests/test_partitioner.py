@@ -21,6 +21,51 @@ def test_totality_no_replication(lubm_small):
         assert int((assign == s).sum()) == int(part.shard_sizes[s])
 
 
+def test_with_replicas_validation_and_rows(lubm_small):
+    """Replication rides on top of the paper's no-replication placement:
+    assign_triples stays primary-only, with_replicas rejects unsafe copies
+    (own primary shard; predicate conflict under a bare-P gather), and
+    replica_rows reports exactly the copied store rows per shard."""
+    import numpy as np
+    import pytest
+
+    from repro.core.features import Feature
+
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    assert part.replicas == {} and part.replicated_triples == 0
+    # a safe candidate: any unit placed away from shard t with no bare-P
+    # conflict on t
+    u = next(u for u in part.unit_shard
+             if part.unit_shard[u] != 0 and part.can_replicate(u, 0))
+    part2 = part.with_replicas({u: (0,)})
+    assert part2.unit_copies(u) == {part.unit_shard[u], 0}
+    assert part2.replicated_triples == part.catalog.sizes[u]
+    # the primary placement is untouched: still every triple exactly once
+    assert np.array_equal(part2.assign_triples(), part.assign_triples())
+    rows = part2.replica_rows()
+    assert set(rows) == {0}
+    assert np.array_equal(rows[0], np.sort(part.catalog.rows_of(u)))
+    # a unit's own primary shard is never a replica target
+    with pytest.raises(ValueError, match="cannot replicate"):
+        part.with_replicas({u: (part.unit_shard[u],)})
+    # out-of-range shard
+    with pytest.raises(ValueError, match="cannot replicate"):
+        part.with_replicas({u: (99,)})
+    # bare-P conflict: when the workload has a P(p) feature, a target
+    # holding any primary unit of that predicate double-counts the gather
+    for u2 in part.unit_shard:
+        if Feature("P", u2.p) not in part.catalog.feature_units:
+            continue
+        clash = [t for v_, t in part.unit_shard.items()
+                 if v_.p == u2.p and t != part.unit_shard[u2]]
+        if clash:
+            assert not part.can_replicate(u2, clash[0])
+            with pytest.raises(ValueError, match="cannot replicate"):
+                part.with_replicas({u2: (clash[0],)})
+            break
+
+
 def test_balance_within_tolerance(lubm_small, bsbm_small):
     for store, qs in [(lubm_small, lubm_queries()),
                       (bsbm_small, bsbm_queries())]:
