@@ -282,6 +282,81 @@ def run_cache(scale: float = 0.1, n_requests: int = 256, iters: int = 3,
     return out
 
 
+def run_latency(scale: float = 0.1, n_requests: int = 96,
+                arrival_ms: float = 2.0,
+                deadlines_ms: tuple = (None, 5.0, 10.0, 25.0),
+                n_shards: int = 3, max_batch: int = 64) -> dict:
+    """Latency under load: the continuous-batching pipeline's deadline sweep.
+
+    One fixed open-loop offered load (a paced round-robin stream, one
+    request per arrival_ms) replayed through the pipeline under each
+    deadline budget, fill-only batching (deadline None) included. With
+    fill-only batching a partial bucket waits for the final drain, so its
+    requests' latency is the remaining stream duration — the deadline
+    budget is what bounds the tail. Reports p50/p95/p99 latency,
+    throughput, and flush-reason counters per budget; asserts results
+    stay bit-identical to synchronous serving and that every finite
+    budget's p99 beats fill-only (the latency/throughput tradeoff the
+    pipeline exists for).
+    """
+    import numpy as np
+
+    from repro.launch.serve import (PipelineConfig, WorkloadServer,
+                                    build_dataset, build_partition,
+                                    replay_paced, request_stream)
+
+    store, queries = build_dataset("lubm", scale)
+    part = build_partition("wawpart", store, queries, n_shards)
+    stream = request_stream(queries, n_requests)
+    out: dict = {"_meta": {"n_triples": len(store),
+                           "n_requests": n_requests,
+                           "arrival_ms": arrival_ms, "max_batch": max_batch,
+                           "offered_qps": 1e3 / arrival_ms}}
+
+    sync = WorkloadServer(queries, part, answer_cache=False)
+    want = sync.serve(stream)
+
+    for deadline in deadlines_ms:
+        srv = WorkloadServer(
+            queries, part, answer_cache=False, cache=sync.cache,
+            pipeline=PipelineConfig(deadline_ms=deadline,
+                                    max_batch=max_batch))
+        # deadline flushes cut partial buckets, so every (bucket, pow2
+        # batch) shape a flush can produce must be compiled before timing:
+        # per bucket, warm each power-of-two prefix of its template set
+        for b in srv.buckets:
+            names = [p.query.name for p in b.plans]
+            sizes = {1 << k for k in range(len(names).bit_length())}
+            for n in sorted(sizes | {len(names)}):
+                if n <= len(names):
+                    srv.warmup([(nm, None) for nm in names[:n]])
+        srv.reset_stats()
+        elapsed, tickets = replay_paced(srv, stream, arrival_ms / 1e3)
+        for t, (w, nw, ovw) in zip(tickets, want):
+            rows, cnt, ovf = t.result
+            assert cnt == nw and bool(ovf) == bool(ovw), t.name
+            assert np.array_equal(rows, w), f"latency parity: {t.name}"
+        ls = srv.latency_stats()
+        label = "fill_only" if deadline is None \
+            else f"deadline_{deadline:g}ms"
+        out[label] = {
+            "deadline_ms": deadline, "elapsed_s": elapsed,
+            "qps": n_requests / elapsed, **ls,
+            "flush_full": srv.stats["flush_full"],
+            "flush_deadline": srv.stats["flush_deadline"],
+            "flush_drain": srv.stats["flush_drain"],
+            "parity": True}
+
+    if None in deadlines_ms:
+        fill_p99 = out["fill_only"]["p99_ms"]
+        for k, r in out.items():
+            if k.startswith("deadline_"):
+                assert r["p99_ms"] < fill_p99, \
+                    (f"{k}: p99 {r['p99_ms']:.1f}ms not below fill-only "
+                     f"{fill_p99:.1f}ms at the same offered load")
+    return out
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -295,6 +370,10 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--json-cache", metavar="PATH", default=None,
                     help="run the Zipfian answer-cache + replication section "
                          "and write its results (BENCH_cache.json)")
+    ap.add_argument("--json-latency", metavar="PATH", default=None,
+                    help="run the latency-under-load deadline sweep through "
+                         "the continuous-batching pipeline and write its "
+                         "results (BENCH_latency.json)")
     args = ap.parse_args(argv)
 
     sharded = not args.no_sharded
@@ -337,6 +416,25 @@ def main(argv: list[str] | None = None) -> None:
               "collectives="
               + "|".join(str(c) for c in rp["collectives_before"]) + "->"
               + "|".join(str(c) for c in rp["collectives_after"]))
+
+    if args.json_latency:
+        import json
+        if args.smoke:
+            lres = run_latency(scale=0.05, n_requests=48,
+                               deadlines_ms=(None, 10.0, 25.0))
+        else:
+            lres = run_latency()
+        with open(args.json_latency, "w") as f:
+            json.dump(lres, f, indent=2, sort_keys=True)
+        print(f"serve/json,0,wrote_{args.json_latency}", file=sys.stderr)
+        for label, r in lres.items():
+            if label == "_meta":
+                continue
+            print(f"serve/latency/{label},{r['p99_ms']:.1f},"
+                  f"p50={r['p50_ms']:.1f};p95={r['p95_ms']:.1f};"
+                  f"qps={r['qps']:.0f};flushes="
+                  f"{r['flush_full']}|{r['flush_deadline']}|"
+                  f"{r['flush_drain']}")
 
     res.pop("_meta")
     for method, rows in res.items():

@@ -12,11 +12,10 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   §Roofline (if results/dryrun.jsonl exists)
 
 The serving, adaptive, and kernel sections also write machine-readable
-``BENCH_serve.json`` / ``BENCH_cache.json`` / ``BENCH_adaptive.json`` /
-``BENCH_kernels.json`` next to the CSV stream, so the perf trajectory is
-tracked (and diffable) across PRs. BENCH_cache.json carries the Zipfian
-answer-cache section: hit-rate x throughput vs a cache-disabled server and
-per-bucket collective counts before/after hot cut-edge replication.
+``BENCH_*.json`` artifacts next to the CSV stream, so the perf trajectory
+is tracked (and diffable) across PRs. ``--list`` prints every section and
+artifact (docs/benchmarks.md documents each artifact's schema and must
+stay in sync — CI's docs job diffs it against this listing).
 
 ``--dry-run`` imports every bench section and checks its entry point without
 executing any measurement — a fast CI rot-guard for the harness itself.
@@ -30,6 +29,36 @@ import sys
 SECTIONS = ("bench_joins", "bench_balance", "bench_lubm", "bench_bsbm",
             "bench_averages", "bench_serve_throughput", "bench_adaptive",
             "bench_kernels")
+
+# artifact -> (producer module, producing flag, one-line summary); --list
+# prints this table and docs/benchmarks.md documents each row's schema
+ARTIFACTS = {
+    "BENCH_serve.json": (
+        "bench_serve_throughput", "--json",
+        "batched serving throughput: per-query vs bucketed vs shard_map"),
+    "BENCH_cache.json": (
+        "bench_serve_throughput", "--json-cache",
+        "Zipfian answer-cache hit-rate/speedup + hot cut-edge replication"),
+    "BENCH_latency.json": (
+        "bench_serve_throughput", "--json-latency",
+        "continuous-batching pipeline: latency-vs-deadline-budget sweep"),
+    "BENCH_adaptive.json": (
+        "bench_adaptive", "--json",
+        "adaptive vs static serving across a two-phase workload drift"),
+    "BENCH_kernels.json": (
+        "bench_kernels", "--json",
+        "jnp vs Pallas kg_scan/kg_join kernel micro + end-to-end serve"),
+}
+
+
+def list_sections() -> None:
+    """Print every bench section and BENCH_*.json artifact (no jax import)."""
+    print("sections:")
+    for name in SECTIONS:
+        print(f"  {name}")
+    print("artifacts:")
+    for artifact, (module, flag, summary) in ARTIFACTS.items():
+        print(f"  {artifact}  ({module} {flag})  {summary}")
 
 
 def dry_run() -> None:
@@ -47,7 +76,13 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true",
                     help="import + entry-point check only, no measurements")
+    ap.add_argument("--list", action="store_true",
+                    help="print every section and BENCH_*.json artifact, "
+                         "then exit (imports nothing)")
     args = ap.parse_args()
+    if args.list:
+        list_sections()
+        return
     if args.dry_run:
         dry_run()
         return
@@ -70,7 +105,8 @@ def main() -> None:
     bench_bsbm.main()
     bench_averages.main()
     bench_serve_throughput.main(["--json", "BENCH_serve.json",
-                                 "--json-cache", "BENCH_cache.json"])
+                                 "--json-cache", "BENCH_cache.json",
+                                 "--json-latency", "BENCH_latency.json"])
     bench_adaptive.main(["--json", "BENCH_adaptive.json"])
     bench_kernels.main(["--json", "BENCH_kernels.json"])
     if os.path.exists("results/dryrun.jsonl"):

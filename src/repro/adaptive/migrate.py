@@ -25,6 +25,13 @@ from repro.engine.federated import ShardedKG
 
 @dataclass
 class MigrationPlan:
+    """Row-level diff between two placements of one triple store.
+
+    Built by `build`; `shard_deltas` groups the moved rows by (src, dst)
+    shard pair and `apply_kg` rebuilds a live ShardedKG in place of a
+    cold restart. n_moved/moved_fraction summarize the movement cost.
+    """
+
     old_assign: np.ndarray          # (N,) shard per triple row, old placement
     new_assign: np.ndarray          # (N,) shard per triple row, new placement
     n_shards: int                   # target shard count
@@ -33,6 +40,11 @@ class MigrationPlan:
 
     @staticmethod
     def build(old: Partitioning, new: Partitioning) -> "MigrationPlan":
+        """Diff two placements' assign_triples() into a plan.
+
+        Raises ValueError when the placements cover different stores —
+        a migration only moves rows, it never changes which rows exist.
+        """
         if old.catalog.store is not new.catalog.store:
             raise ValueError("migration requires both placements to cover "
                              "the same triple store")

@@ -36,13 +36,17 @@ class ReplicationCandidate:
 
     @property
     def score(self) -> float:
-        # gathers saved per replicated triple — same currency as the
-        # partitioner's q/s terms in score_replicated_feature
+        """Gathers saved per replicated triple — same currency as the
+        partitioner's q/s terms in score_replicated_feature."""
         return self.weight / max(1, self.triples)
 
 
 @dataclass
 class ReplicationReport:
+    """What plan_hot_replication decided: every safe candidate, the greedy
+    budget-bounded selection, and the merged `replicas` map ready for
+    `Partitioning.with_replicas` (empty when nothing scored under budget)."""
+
     candidates: list[ReplicationCandidate]
     chosen: list[ReplicationCandidate]
     replicas: dict[DataUnit, tuple[int, ...]] = field(default_factory=dict)
@@ -50,6 +54,7 @@ class ReplicationReport:
 
     @property
     def total_triples(self) -> int:
+        """Rows the chosen replicas copy (the spent part of the budget)."""
         return sum(c.triples for c in self.chosen)
 
 

@@ -111,6 +111,13 @@ def count_hlo_collectives(text: str) -> int:
 
 @dataclass
 class PlanBucket:
+    """One shape bucket: a signature plus the member plans padded to it.
+
+    ``plans`` are the bucket's members (noop-padded to ``signature.n_steps``),
+    ``n_params`` the widest member's params vector (requests zero-pad to it),
+    and ``pdata`` the per-plan numpy ``PlanData`` the engine consumes.
+    """
+
     signature: BucketSignature
     plans: list[PhysicalPlan]        # padded to the signature's shape
     n_params: int                    # params-vector width (>= 1)
@@ -446,6 +453,7 @@ def make_batched_engine(sig: BucketSignature, *, join_impl: str = "expand",
 
     def engine(triples: jax.Array, valid: jax.Array, perms: jax.Array,
                pd: PlanData, params: jax.Array):
+        """One request's plan interpreted against the (sharded) KG."""
         my = jax.lax.axis_index(axis_name) if S > 1 else jnp.int32(0)
         table = jnp.full((R, V), -1, jnp.int32)
         tmask = jnp.zeros((R,), bool).at[0].set(True)
@@ -557,6 +565,7 @@ def make_sharded_batched_engine(sig: BucketSignature, mesh, *,
                                  kernel_blocks=kernel_blocks)
 
     def kernel(triples, valid, perms, pd, params):
+        """Per-shard body: vmap the engine over the batch axis."""
         t, m, o = jax.vmap(engine, in_axes=(None, None, None, 0, 0))(
             triples[0], valid[0], perms[0], pd, params)
         return t[None], m[None], o[None]
@@ -569,6 +578,7 @@ def make_sharded_batched_engine(sig: BucketSignature, mesh, *,
                           check_rep=backend != "pallas")
 
     def fn(triples, valid, perms, pd, params):
+        """shard_map the kernel and restore the vmap path's axis order."""
         t, m, o = sm(triples, valid, perms, pd, params)
         # (shard, batch, ...) -> (batch, shard, ...): match the vmap path's
         # layout so extract_batch serves both
@@ -600,6 +610,15 @@ class EngineCache:
             max_per_row: int | None = None, gather_cap: int | None = None,
             axis_name: str = AXIS, mesh=None, backend: str = "jnp",
             kernel_blocks: KernelBlocks | None = None):
+        """Return the jitted engine for ``(sig, options)``, building on miss.
+
+        ``mesh=None`` returns the double-vmapped simulation engine; a mesh
+        returns the shard_map engine for that mesh. ``backend`` and
+        ``kernel_blocks`` select the execution backend and its tile sizes
+        (validated here via ``check_backend`` — raises ValueError on an
+        unknown backend or a non-``KernelBlocks`` tiling). Every argument
+        is part of the cache key; `hits`/`misses` count lookups.
+        """
         blocks = check_backend(backend, kernel_blocks)
         key = (sig, join_impl, max_per_row, gather_cap, axis_name, mesh,
                backend, blocks)
@@ -649,10 +668,57 @@ def canonical_params(pv: np.ndarray | None, n_params: int) -> bytes:
     return vec.tobytes()
 
 
+def pad_requests_pow2(requests: list[tuple[int, np.ndarray | None]],
+                      ) -> list[tuple[int, np.ndarray | None]]:
+    """Pad a request batch to a power-of-two length with noop fillers.
+
+    Per-bucket batch sizes vary with the stream's phase, with how many
+    duplicates dedup collapsed, and — under the continuous-batching
+    pipeline — with when a deadline cut the bucket queue. Every new
+    batch-axis length would be a fresh jit specialization (a recompile in
+    steady state), so both the synchronous ``serve()`` path and the
+    pipeline's partial-bucket flushes pad the batch axis to the next power
+    of two with ``(plan 0, no params)`` filler requests. Fillers sit at the
+    tail: extraction truncates to the real requests before the host-side
+    ``np.unique``, so the fillers are never observable in results.
+    """
+    n_pad = 1 << max(0, len(requests) - 1).bit_length()
+    return requests + [(0, None)] * (n_pad - len(requests))
+
+
+def stage_batch(bucket: PlanBucket,
+                requests: list[tuple[int, np.ndarray | None]], *,
+                mesh=None) -> tuple[PlanData, jnp.ndarray]:
+    """Assemble a request batch and start its host-to-device transfer.
+
+    ``assemble_batch`` + ``jax.device_put``: the returned ``(PlanData,
+    params)`` are device arrays whose copies are already in flight when the
+    engine call is issued, so a serving pipeline can overlap host-side
+    param extraction and staging of batch *k+1* with device compute of
+    batch *k* (double buffering — JAX dispatch is asynchronous, so the
+    caller only blocks when it extracts results). Under a ``mesh`` the
+    arrays are placed replicated across the shard axis, matching the
+    shard_map engines' ``P()`` in_specs for plan data and params.
+
+    Raises ValueError (from ``assemble_batch``) on an empty batch or on a
+    param vector wider than the bucket's ``n_params``.
+    """
+    pd, params = assemble_batch(bucket, requests)
+    if mesh is None:
+        return jax.device_put((pd, params))
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.device_put((pd, params),
+                          NamedSharding(mesh, PartitionSpec()))
+
+
 def assemble_batch(bucket: PlanBucket,
                    requests: list[tuple[int, np.ndarray | None]],
                    ) -> tuple[PlanData, jnp.ndarray]:
-    """Stack (plan_idx, params) requests into (PlanData[B,...], params[B,P])."""
+    """Stack (plan_idx, params) requests into (PlanData[B,...], params[B,P]).
+
+    Raises ValueError on an empty request list or (via
+    ``canonical_params``) on a param vector wider than the bucket width.
+    """
     if not requests:
         raise ValueError("empty request batch")
     P = bucket.n_params

@@ -18,27 +18,133 @@ template mix, detects drift against the mix the partitioning was computed
 from, and migrates shards under a triple-movement budget between batches —
 pair it with --drift, which serves a two-phase stream whose template mix
 shifts halfway through.
+
+--pipeline serves through the continuous-batching pipeline instead of
+fixed synchronous batches: requests are submitted one by one with paced
+arrivals (--arrival-ms), per-bucket queues flush when full or when the
+oldest queued request's deadline budget (--deadline-ms) expires, and the
+run reports p50/p95/p99 latency plus flush-reason counters. See
+docs/architecture.md for the full request lifecycle.
 """
 from __future__ import annotations
 
 import argparse
+import enum
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from contextlib import contextmanager
-from typing import NamedTuple
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple
 
 import numpy as np
 
 from repro.core.features import pattern_feature
 from repro.core.partitioner import (Partitioning, centralized_partition,
                                     random_partition, wawpart_partition)
-from repro.engine.batch import (EngineCache, assemble_batch, bucket_collectives,
-                                bucket_plans, canonical_params, dedup_requests,
-                                extract_batch, extract_fanout, shard_perms)
+from repro.engine.batch import (EngineCache, bucket_collectives, bucket_plans,
+                                canonical_params, dedup_requests,
+                                extract_batch, extract_fanout,
+                                pad_requests_pow2, shard_perms, stage_batch)
 from repro.engine.federated import ShardedKG
 from repro.engine.planner import make_plan
 from repro.kg.generator import generate_bsbm, generate_lubm
 from repro.kg.workloads import bsbm_queries, lubm_queries
+
+
+class Counter(str, enum.Enum):
+    """Every ``WorkloadServer.stats`` counter, by name.
+
+    The single source of truth for the stats dict's keys — tests and
+    benches import this instead of re-spelling strings (each member *is*
+    its string value, so ``stats[Counter.SERVED]`` and ``stats["served"]``
+    hit the same entry). Each counter's meaning is documented in
+    docs/architecture.md ("Stats counters").
+    """
+
+    SERVED = "served"                  # requests delivered (hits + executed)
+    EXECUTED = "executed"              # unique instances dispatched to engines
+    DEDUPED = "deduped"                # requests collapsed onto an instance
+    CACHE_HITS = "cache_hits"          # answer-cache hits (bypass the queue)
+    CACHE_MISSES = "cache_misses"      # answer-cache lookups that missed
+    FLUSH_FULL = "flush_full"          # dispatches cut by a full bucket queue
+    FLUSH_DEADLINE = "flush_deadline"  # dispatches cut by a deadline expiry
+    FLUSH_DRAIN = "flush_drain"        # dispatches cut by drain()/serve()
+
+
+def _fresh_stats() -> dict[str, int]:
+    """A zeroed stats dict with one entry per ``Counter`` member."""
+    return {c.value: 0 for c in Counter}
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Continuous-batching pipeline knobs (see WorkloadServer.submit).
+
+    deadline_ms: per-request latency budget — a bucket's queue is flushed
+        partially filled once its oldest request has waited this long.
+        ``None`` disables deadline flushes entirely (fill-only batching:
+        a bucket dispatches only when full or drained).
+    max_batch: queue length that triggers an immediate "full" flush.
+    max_inflight: dispatched-but-unextracted batches kept outstanding —
+        2 is classic double buffering (stage/submit batch k+1 while batch
+        k computes on device); 1 degenerates to synchronous dispatch.
+    clock: monotonic time source; injectable so tests drive deadlines
+        deterministically without sleeping.
+    """
+
+    deadline_ms: float | None = 25.0
+    max_batch: int = 64
+    max_inflight: int = 2
+    clock: Callable[[], float] = time.monotonic
+
+
+@dataclass
+class Ticket:
+    """One submitted request's handle: result slot + lifecycle timestamps.
+
+    ``submit()`` returns a Ticket immediately; ``done`` flips when the
+    request's batch is extracted (or instantly on an answer-cache hit).
+    The four timestamps are the pipeline's latency instrumentation:
+    enqueue (submit), flush (queue cut into a batch), dispatch (engine
+    call issued), done (results extracted) — ``latency_s`` is end-to-end.
+    ``epoch`` records the serving epoch the request executed against and
+    ``flush_reason`` which trigger cut its batch ("full" | "deadline" |
+    "drain"; "hit" for answer-cache hits that never queued).
+    """
+
+    name: str
+    params: np.ndarray | None
+    seq: int
+    t_enqueue: float
+    deadline_s: float | None = None     # absolute; None = never expires
+    t_flush: float | None = None
+    t_dispatch: float | None = None
+    t_done: float | None = None
+    result: tuple | None = None
+    done: bool = False
+    epoch: int | None = None
+    flush_reason: str | None = None
+    cache_hit: bool = False
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end latency (enqueue -> done) in seconds."""
+        if self.t_done is None:
+            raise ValueError(f"request {self.name!r} is not done yet")
+        return self.t_done - self.t_enqueue
+
+
+class _Inflight(NamedTuple):
+    """One dispatched-but-unextracted batch (the pipeline's device leg)."""
+    bucket: object
+    tickets: list                     # Tickets in flush order
+    unique: list                      # deduped (plan_idx, params) requests
+    inverse: list | None              # fan-out map, None when dedup is off
+    out: tuple                        # engine output (table, mask, overflow)
+    epoch: int                        # serving epoch at dispatch
+
+
+_UNSET = object()     # "use the config default" sentinel for submit()
 
 
 class _ServingState(NamedTuple):
@@ -75,7 +181,7 @@ class WorkloadServer:
 
     dedup=True (default) collapses identical (template, params) requests
     within a batch to one scanned instance, fanned back out at delivery —
-    `stats` tracks served/executed/deduped counts.
+    `stats` tracks served/executed/deduped counts (see `Counter`).
 
     backend selects the engines' execution backend: "jnp" (dense XLA) or
     "pallas" (fused kg_scan/kg_join kernels; kernel_blocks sets their tile
@@ -96,6 +202,15 @@ class WorkloadServer:
     `replicate_hot`) bumps the serving epoch and the whole cache drops, so
     a stale pre-migration answer is never served. `stats` tracks
     cache_hits/cache_misses; warmup never reads or fills the cache.
+
+    pipeline (a `PipelineConfig`) tunes the continuous-batching path:
+    `submit()` enqueues one request into its bucket's queue and returns a
+    `Ticket`; queues flush when full (max_batch), when the oldest queued
+    request's deadline budget expires, or on `drain()`. Host-side batch
+    assembly is overlapped with device compute via double-buffered staging
+    (`engine/batch.stage_batch`, up to max_inflight outstanding batches).
+    The synchronous `serve()` is a thin wrapper over submit+drain and
+    returns bit-identical results to pre-pipeline serving.
     """
 
     ANSWER_CACHE_CAP = 65536
@@ -107,7 +222,14 @@ class WorkloadServer:
                  cache: EngineCache | None = None,
                  mesh=None, dedup: bool = True, adaptive=None,
                  answer_cache: bool | int = True,
-                 backend: str = "jnp", kernel_blocks=None):
+                 backend: str = "jnp", kernel_blocks=None,
+                 pipeline: PipelineConfig | None = None):
+        """Build the serving state for `part` and compile nothing yet.
+
+        Raises ValueError on an unknown backend or invalid kernel_blocks
+        (via `check_backend`); engine compilation happens lazily on the
+        first dispatch that touches each bucket.
+        """
         from repro.engine.primitives import check_backend
         self.queries = list(queries)
         self.join_impl = join_impl
@@ -118,15 +240,20 @@ class WorkloadServer:
         self.cache = cache if cache is not None else EngineCache()
         self.mesh = mesh
         self.dedup = dedup
-        self.stats = {"served": 0, "executed": 0, "deduped": 0,
-                      "cache_hits": 0, "cache_misses": 0}
+        self.stats = _fresh_stats()
         self.params_spec = params_spec or {}
+        self.pipeline = pipeline if pipeline is not None else PipelineConfig()
         self._track = True
         self.answer_cache_cap = (self.ANSWER_CACHE_CAP if answer_cache is True
                                  else int(answer_cache))
         self._answers: OrderedDict[tuple, tuple] = OrderedDict()
         self._answers_epoch = 0
         self._cache_bypass = False
+        self._queues: dict[int, list[Ticket]] = {}
+        self._queues_epoch = 0
+        self._inflight: deque[_Inflight] = deque()
+        self._latencies: deque[tuple] = deque(maxlen=self.ANSWER_CACHE_CAP)
+        self._seq = 0
 
         plans = {q.name: make_plan(q, part,
                                    params=self.params_spec.get(q.name))
@@ -163,30 +290,37 @@ class WorkloadServer:
 
     @property
     def part(self) -> Partitioning:
+        """The current epoch's partitioning."""
         return self._state.part
 
     @property
     def kg(self) -> ShardedKG:
+        """The current epoch's sharded triple blocks."""
         return self._state.kg
 
     @property
     def buckets(self) -> list:
+        """The current epoch's plan buckets (engine compilation units)."""
         return self._state.buckets
 
     @property
     def route(self) -> dict:
+        """template name -> (bucket index, plan index) under this epoch."""
         return self._state.route
 
     @property
     def epoch(self) -> int:
+        """Serving epoch: bumped by every migrate()/replicate_hot()."""
         return self._state.epoch
 
     @property
     def n_buckets(self) -> int:
+        """Number of shape buckets (upper bound on compiles per epoch)."""
         return len(self._state.buckets)
 
     @property
     def n_compiles(self) -> int:
+        """Engines built so far through this server's (shared) EngineCache."""
         return self.cache.misses
 
     def collective_counts(self) -> list[int]:
@@ -218,7 +352,16 @@ class WorkloadServer:
           3. buckets rebuilt; the shared EngineCache keeps every bucket
              whose signature survived — only changed signatures compile;
           4. the epoch bumps and the serving state swaps atomically;
-             in-flight batches hold the old state by reference.
+             in-flight batches hold the old state by reference, and
+             *queued* (not yet flushed) pipeline requests re-route through
+             the new epoch's buckets before their next dispatch — a
+             post-migration flush never executes a stale-epoch plan.
+
+        The epoch bump invalidates the whole answer cache (stale
+        pre-migration answers are never served). Returns a report dict:
+        epoch, n_moved, moved_fraction, plans_rewritten/reused,
+        signatures_reused/new, cap_grew. Raises ValueError (via
+        MigrationPlan.build) if `new_part` covers a different store.
         """
         from repro.adaptive.migrate import MigrationPlan
 
@@ -273,14 +416,21 @@ class WorkloadServer:
 
         query_weights defaults to the adaptive tracker's live window (when
         attached and non-empty), then the partitioning's recorded workload
-        weights, then uniform. Sequencing mirrors `migrate`: the ShardedKG
-        is rebuilt with replica rows appended (old block capacity kept when
-        they fit in the padding, so unchanged engines keep their shapes),
-        only the affected queries re-plan (capacities reused), and the
-        epoch bump atomically swaps the state and drops the answer cache.
-        Results stay bit-identical — replication only changes *where* a
-        step's rows are read, never which rows exist (see
-        Partitioning.can_replicate for the no-double-count rule).
+        weights, then uniform; top_k bounds how many candidates are taken
+        and budget_frac bounds replicated triples as a fraction of the
+        store. Sequencing mirrors `migrate`: the ShardedKG is rebuilt with
+        replica rows appended (old block capacity kept when they fit in
+        the padding, so unchanged engines keep their shapes), only the
+        affected queries re-plan (capacities reused), and the epoch bump
+        atomically swaps the state, drops the answer cache, and re-routes
+        any queued pipeline requests. Results stay bit-identical —
+        replication only changes *where* a step's rows are read, never
+        which rows exist (see Partitioning.can_replicate for the
+        no-double-count rule).
+
+        Returns a report dict: epoch, replicated_units/_triples,
+        plans_rewritten, queries_affected, collectives_before/_after
+        (per-bucket), cap_grew.
         """
         from repro.adaptive.replicate import plan_hot_replication
 
@@ -335,88 +485,300 @@ class WorkloadServer:
             cap_grew=kg.cap > st.kg.cap)
         return out
 
+    # ---- continuous-batching pipeline ----------------------------------
+
+    def submit(self, name: str, params: np.ndarray | None = None, *,
+               deadline_ms=_UNSET, _pump: bool = True) -> Ticket:
+        """Enqueue one request into its bucket's queue; returns a Ticket.
+
+        The request is routed (feeding the adaptive tracker), checked
+        against the answer cache — a hit bypasses the queue entirely and
+        returns an already-done Ticket whose latency is still stamped —
+        and otherwise appended to its bucket's queue. deadline_ms
+        overrides the pipeline config's budget for this request (None =
+        never deadline-flush it); the queue dispatches when it reaches
+        max_batch ("full"), when its oldest request's budget expires
+        ("deadline", checked in pump()), or on drain().
+
+        Raises KeyError for a template name outside the workload and
+        ValueError for a param vector wider than the bucket executes with.
+        """
+        now = self.pipeline.clock()
+        self._sync_queues()
+        st = self._state
+        bi, pi = st.route[name]
+        # cache hits still feed the tracker: drift detection must see
+        # the real mix even at high hit rates
+        if self.adaptive is not None and self._track:
+            self.adaptive.record(name, st.buckets[bi].plans[pi])
+        # validate params eagerly — an oversized vector must fail at
+        # submit, not at a deadline flush long after the caller moved on
+        key = (name, canonical_params(params, st.buckets[bi].n_params))
+
+        budget = self.pipeline.deadline_ms if deadline_ms is _UNSET \
+            else deadline_ms
+        ticket = Ticket(name=name, params=params, seq=self._seq,
+                        t_enqueue=now,
+                        deadline_s=None if budget is None
+                        else now + budget / 1e3)
+        self._seq += 1
+
+        if self._answers and self._answers_epoch != st.epoch:
+            self._answers.clear()
+        self._answers_epoch = st.epoch
+        if self.answer_cache_cap > 0 and not self._cache_bypass:
+            hit = self._answers.get(key)
+            if hit is not None:
+                self._answers.move_to_end(key)
+                ticket.result = hit
+                ticket.done = True
+                ticket.cache_hit = True
+                ticket.flush_reason = "hit"
+                ticket.epoch = st.epoch
+                ticket.t_flush = ticket.t_dispatch = ticket.t_done = \
+                    self.pipeline.clock()
+                self.stats[Counter.SERVED] += 1
+                self.stats[Counter.CACHE_HITS] += 1
+                self._latencies.append((ticket.t_enqueue, ticket.t_flush,
+                                        ticket.t_dispatch, ticket.t_done))
+                return ticket
+            self.stats[Counter.CACHE_MISSES] += 1
+
+        self._queues.setdefault(bi, []).append(ticket)
+        if _pump:
+            self.pump()
+        return ticket
+
+    def pump(self) -> int:
+        """Advance the pipeline without blocking on new work.
+
+        Cuts every full queue into "full" flushes (max_batch at a time),
+        deadline-flushes every bucket whose oldest queued request's budget
+        has expired (the *partial* bucket dispatch that bounds tail
+        latency), and retires in-flight batches whose device results are
+        ready. Returns the number of requests completed by this call.
+        Drives the adaptive drift check after completions, mirroring the
+        synchronous path's between-batches cadence.
+        """
+        self._sync_queues()
+        before = self.stats[Counter.SERVED]
+        now = self.pipeline.clock()
+        for bi in list(self._queues):
+            while len(self._queues.get(bi, ())) >= self.pipeline.max_batch:
+                self._flush(bi, "full", now, limit=self.pipeline.max_batch)
+        for bi in list(self._queues):
+            q = self._queues.get(bi)
+            if not q:
+                continue
+            due = min((t.deadline_s for t in q if t.deadline_s is not None),
+                      default=None)
+            if due is not None and now >= due:
+                self._flush(bi, "deadline", now)
+        self._retire()
+        done = self.stats[Counter.SERVED] - before
+        if done and self.adaptive is not None and self._track:
+            self.adaptive.maybe_adapt()
+        return done
+
+    def drain(self) -> int:
+        """Flush every queued request and retire all in-flight batches.
+
+        The shutdown/sync barrier: after drain() returns, every submitted
+        Ticket is done, `queue_depth()` is 0, and nothing is in flight.
+        Each bucket's remaining queue dispatches as one batch (reason
+        "drain", however partial). Returns the number of requests
+        completed by this call.
+        """
+        self._sync_queues()
+        before = self.stats[Counter.SERVED]
+        now = self.pipeline.clock()
+        for bi in list(self._queues):
+            if self._queues.get(bi):
+                self._flush(bi, "drain", now)
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+        return self.stats[Counter.SERVED] - before
+
+    def queue_depth(self) -> int:
+        """Requests enqueued but not yet flushed into a dispatch."""
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def n_inflight(self) -> int:
+        """Batches dispatched to the device but not yet extracted."""
+        return len(self._inflight)
+
+    def latency_stats(self) -> dict:
+        """Latency percentiles over the recorded request lifecycle stamps.
+
+        Covers every request completed since the last reset_stats()
+        (answer-cache hits included — their latency is the submit
+        round-trip). Returns n plus p50/p95/p99/mean/max end-to-end
+        latency in ms, and p99 of the queue (enqueue->flush) and service
+        (flush->done) legs; all zeros when nothing was recorded.
+        """
+        keys = ("p50_ms", "p95_ms", "p99_ms", "mean_ms", "max_ms",
+                "queue_p99_ms", "service_p99_ms")
+        if not self._latencies:
+            return {"n": 0, **{k: 0.0 for k in keys}}
+        rec = np.asarray(self._latencies)
+        total = (rec[:, 3] - rec[:, 0]) * 1e3
+        queue = (rec[:, 1] - rec[:, 0]) * 1e3
+        service = (rec[:, 3] - rec[:, 1]) * 1e3
+        return {"n": int(rec.shape[0]),
+                "p50_ms": float(np.percentile(total, 50)),
+                "p95_ms": float(np.percentile(total, 95)),
+                "p99_ms": float(np.percentile(total, 99)),
+                "mean_ms": float(total.mean()),
+                "max_ms": float(total.max()),
+                "queue_p99_ms": float(np.percentile(queue, 99)),
+                "service_p99_ms": float(np.percentile(service, 99))}
+
+    def _sync_queues(self) -> None:
+        """Re-route queued requests after an epoch bump (lazy).
+
+        migrate()/replicate_hot() rebuild the buckets, so queue keys
+        (bucket indices) and plan routing may be stale. Queued tickets are
+        re-enqueued through the *new* epoch's route in submission order,
+        keeping their original enqueue timestamps and deadlines — a flush
+        after the bump can therefore never dispatch a stale-epoch plan.
+        In-flight batches are untouched: they already dispatched and
+        finish against the epoch they started on.
+        """
+        if self._queues_epoch == self._state.epoch:
+            return
+        pending = sorted((t for q in self._queues.values() for t in q),
+                         key=lambda t: t.seq)
+        self._queues = {}
+        for t in pending:
+            bi, _ = self._state.route[t.name]
+            self._queues.setdefault(bi, []).append(t)
+        self._queues_epoch = self._state.epoch
+
+    def _flush(self, bi: int, reason: str, now: float,
+               limit: int | None = None) -> None:
+        """Cut (up to limit of) bucket bi's queue into one engine dispatch.
+
+        Stamps flush/dispatch times, dedups, pads the batch axis to a
+        power of two (noop fillers), stages the batch onto the device
+        (overlapped transfer), issues the asynchronous engine call, and
+        enqueues the in-flight record. Completes the oldest in-flight
+        batch synchronously when max_inflight would be exceeded — the
+        pipeline's backpressure.
+        """
+        q = self._queues[bi]
+        take, rest = (q[:limit], q[limit:]) if limit is not None \
+            else (q, [])
+        if rest:
+            self._queues[bi] = rest
+        else:
+            del self._queues[bi]
+
+        st = self._state
+        bucket = st.buckets[bi]
+        for t in take:
+            t.t_flush = now
+            t.flush_reason = reason
+        reqs = [(st.route[t.name][1], t.params) for t in take]
+        if self.dedup:
+            unique, inverse = dedup_requests(reqs, bucket.n_params)
+        else:
+            unique, inverse = reqs, None
+        fn = self._engine(bucket)
+        pd, params = stage_batch(bucket, pad_requests_pow2(unique),
+                                 mesh=self.mesh)
+        out = fn(st.tr, st.va, st.perms, pd, params)
+        t_dispatch = self.pipeline.clock()
+        for t in take:
+            t.t_dispatch = t_dispatch
+            t.epoch = st.epoch
+        self.stats[Counter(f"flush_{reason}")] += 1
+        self._inflight.append(_Inflight(bucket, take, unique, inverse, out,
+                                        st.epoch))
+        while len(self._inflight) > self.pipeline.max_inflight:
+            self._complete(self._inflight.popleft())
+
+    def _retire(self) -> int:
+        """Complete in-flight batches whose device results are ready.
+
+        Only the queue head is eligible (completion order == dispatch
+        order); readiness is polled without blocking, so a pump() between
+        paced arrivals retires finished work early and keeps result
+        latency from being deferred to the next flush or drain.
+        """
+        done = 0
+        while self._inflight and all(
+                getattr(a, "is_ready", lambda: True)()
+                for a in self._inflight[0].out):
+            done += self._complete(self._inflight.popleft())
+        return done
+
+    def _complete(self, rec: _Inflight) -> int:
+        """Extract one in-flight batch and deliver its results.
+
+        Blocks until the device output is ready, runs the host-side
+        extraction (per-unique np.unique, fan-out to duplicates), stamps
+        done-times, fills the answer cache (only when the serving epoch
+        still matches the dispatch epoch — a migration mid-flight makes
+        the answers stale before they ever land), and bumps the
+        served/executed/deduped counters. Returns the delivered count.
+        """
+        import jax
+
+        jax.block_until_ready(rec.out)
+        if rec.inverse is None:
+            extracted = extract_batch(rec.bucket, rec.unique, *rec.out)
+        else:
+            extracted = extract_fanout(rec.bucket, rec.unique, rec.inverse,
+                                       *rec.out)
+        now = self.pipeline.clock()
+        fill = (self.answer_cache_cap > 0 and not self._cache_bypass
+                and rec.epoch == self._state.epoch)
+        self.stats[Counter.SERVED] += len(rec.tickets)
+        self.stats[Counter.EXECUTED] += len(rec.unique)
+        self.stats[Counter.DEDUPED] += len(rec.tickets) - len(rec.unique)
+        for t, res in zip(rec.tickets, extracted):
+            t.result = res
+            t.t_done = now
+            t.done = True
+            self._latencies.append((t.t_enqueue, t.t_flush, t.t_dispatch,
+                                    t.t_done))
+            if fill:
+                key = (t.name, canonical_params(t.params,
+                                                rec.bucket.n_params))
+                if key not in self._answers:
+                    self._answers[key] = res
+                    if len(self._answers) > self.answer_cache_cap:
+                        self._answers.popitem(last=False)
+        return len(rec.tickets)
+
     # ---- serving -------------------------------------------------------
 
     def serve(self, requests: list[tuple[str, np.ndarray | None]],
               block: bool = True):
         """Execute one batch of requests; results align with request order.
 
-        Requests are grouped per bucket (one engine dispatch per bucket that
-        appears in the batch), identical instances are collapsed (dedup), and
-        each result is (solutions, count, overflow). With adaptivity on, the
-        batch also feeds the workload tracker and a drift check (and possibly
-        a migration) runs after the batch completes.
+        A thin synchronous wrapper over the pipeline: every request is
+        submitted (without intermediate flushes) and one drain() delivers
+        them — each bucket appearing in the batch dispatches exactly once,
+        identical instances collapse (dedup), and each result is
+        (solutions, count, overflow); bit-identical to pre-pipeline
+        synchronous serving. `block` is kept for signature compatibility
+        (delivery always blocks on extraction). With adaptivity on, the
+        batch feeds the workload tracker and a drift check (and possibly a
+        migration) runs after the batch completes. Raises KeyError /
+        ValueError per submit().
         """
-        import jax
-
-        st = self._state
-        # lazy epoch check backs the eager clears in migrate/replicate_hot:
-        # any state swap makes every cached answer stale at once
-        if self._answers and self._answers_epoch != st.epoch:
-            self._answers.clear()
-        self._answers_epoch = st.epoch
-        use_cache = self.answer_cache_cap > 0 and not self._cache_bypass
-
-        track = self.adaptive is not None and self._track
-        results: list = [None] * len(requests)
-        by_bucket: dict[int, list] = {}
-        for r, (name, pv) in enumerate(requests):
-            bi, pi = st.route[name]
-            # cache hits still feed the tracker: drift detection must see
-            # the real mix even at high hit rates
-            if track:
-                self.adaptive.record(name, st.buckets[bi].plans[pi])
-            key = None
-            if use_cache:
-                key = (name, canonical_params(pv, st.buckets[bi].n_params))
-                hit = self._answers.get(key)
-                if hit is not None:
-                    self._answers.move_to_end(key)
-                    results[r] = hit
-                    self.stats["served"] += 1
-                    self.stats["cache_hits"] += 1
-                    continue
-                self.stats["cache_misses"] += 1
-            by_bucket.setdefault(bi, []).append((r, pi, pv, key))
-
-        for bi, items in by_bucket.items():
-            bucket = st.buckets[bi]
-            reqs = [(pi, pv) for _, pi, pv, _ in items]
-            if self.dedup:
-                unique, inverse = dedup_requests(reqs, bucket.n_params)
-            else:
-                unique, inverse = reqs, None
-            # pad the batch axis to a power of two: per-bucket batch sizes
-            # vary with the stream's phase (and with how many duplicates
-            # collapsed), and every new size would be a fresh jit
-            # specialization (a recompile mid-steady-state)
-            n_pad = 1 << max(0, len(unique) - 1).bit_length()
-            padded = unique + [(0, None)] * (n_pad - len(unique))
-            fn = self._engine(bucket)
-            pd, params = assemble_batch(bucket, padded)
-            out = fn(st.tr, st.va, st.perms, pd, params)
-            if block:
-                jax.block_until_ready(out)
-            # fillers sit at the tail: truncate before the host-side
-            # extraction (np.unique per request) rather than after
-            if inverse is None:
-                extracted = extract_batch(bucket, unique, *out)
-            else:
-                extracted = extract_fanout(bucket, unique, inverse, *out)
-            self.stats["served"] += len(items)
-            self.stats["executed"] += len(unique)
-            self.stats["deduped"] += len(items) - len(unique)
-            for (r, _, _, key), res in zip(items, extracted):
-                results[r] = res
-                if key is not None and key not in self._answers:
-                    self._answers[key] = res
-                    if len(self._answers) > self.answer_cache_cap:
-                        self._answers.popitem(last=False)
-        if track:
+        del block     # extraction always blocks; kept for call-site compat
+        tickets = [self.submit(name, pv, _pump=False)
+                   for name, pv in requests]
+        self.drain()
+        if self.adaptive is not None and self._track:
             self.adaptive.maybe_adapt()
-        return results
+        return [t.result for t in tickets]
 
     def _engine(self, bucket):
+        """The compiled engine for `bucket` under this server's options."""
         return self.cache.get(bucket.signature, join_impl=self.join_impl,
                               max_per_row=self.max_per_row,
                               gather_cap=self.gather_cap, mesh=self.mesh,
@@ -447,11 +809,13 @@ class WorkloadServer:
             self._cache_bypass = bypass
 
     def reset_stats(self) -> None:
-        self.stats = {"served": 0, "executed": 0, "deduped": 0,
-                      "cache_hits": 0, "cache_misses": 0}
+        """Zero every stats counter and drop the recorded latencies."""
+        self.stats = _fresh_stats()
+        self._latencies.clear()
 
 
 def build_dataset(dataset: str, scale: float, seed: int = 0):
+    """(store, template queries) for "lubm" or "bsbm" at `scale`."""
     if dataset == "lubm":
         return generate_lubm(1, scale=scale, seed=seed), lubm_queries()
     return generate_bsbm(int(1000 * scale), seed=seed), bsbm_queries()
@@ -459,6 +823,7 @@ def build_dataset(dataset: str, scale: float, seed: int = 0):
 
 def build_partition(method: str, store, queries, n_shards: int,
                     query_weights: dict[str, float] | None = None):
+    """Partition `store` by method: "wawpart" | "random" | "centralized"."""
     if method == "wawpart":
         return wawpart_partition(store, queries, n_shards=n_shards,
                                  query_weights=query_weights)
@@ -477,7 +842,8 @@ def request_stream(queries, n_requests: int, *,
     weights ({template name: relative frequency}), requests are sampled
     i.i.d. from the normalized distribution using the explicit seed (an
     int or a spawned SeedSequence) — the realistic skewed traffic the
-    adaptive subsystem exists for.
+    adaptive subsystem exists for. Raises ValueError when the weights give
+    zero total mass over the workload.
     """
     if weights is None:
         return [(queries[i % len(queries)].name, None)
@@ -515,7 +881,34 @@ def two_phase_weights(queries) -> tuple[dict[str, float], dict[str, float]]:
     return a, b
 
 
+def replay_paced(server: WorkloadServer, stream, arrival_s: float,
+                 ) -> tuple[float, list[Ticket]]:
+    """Feed `stream` through the pipeline at one request per `arrival_s`.
+
+    The open-loop load generator the latency bench and --pipeline share:
+    arrivals are paced on the wall clock (the offered load is fixed, not
+    adapted to service speed), the server is pumped while waiting so
+    deadline flushes and in-flight retirement happen on time, and a final
+    drain() delivers everything. Returns (elapsed seconds, tickets).
+    """
+    tickets: list[Ticket] = []
+    t0 = time.monotonic()
+    t_next = t0
+    for name, pv in stream:
+        while True:
+            now = time.monotonic()
+            if now >= t_next:
+                break
+            server.pump()
+            time.sleep(min(2e-4, t_next - now))
+        tickets.append(server.submit(name, pv))
+        t_next += arrival_s
+    server.drain()
+    return time.monotonic() - t0, tickets
+
+
 def main() -> None:
+    """CLI entry point: partition, warm up, and serve the request stream."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=("lubm", "bsbm"), default="lubm")
     ap.add_argument("--scale", type=float, default=0.3)
@@ -529,7 +922,8 @@ def main() -> None:
                          "native on TPU, interpret mode elsewhere — results "
                          "are bit-identical either way)")
     ap.add_argument("--batch", type=int, default=64,
-                    help="requests per serve() call")
+                    help="requests per serve() call (and the pipeline's "
+                         "full-flush threshold under --pipeline)")
     ap.add_argument("--requests", type=int, default=256,
                     help="total requests in the stream")
     ap.add_argument("--max-per-row", type=int, default=0,
@@ -543,6 +937,19 @@ def main() -> None:
                     help="disable scan-dedup of identical batch requests")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the epoch-versioned answer cache")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="serve through the continuous-batching pipeline "
+                         "(submit/pump/drain) with paced arrivals and "
+                         "deadline-based partial-bucket flushes, reporting "
+                         "p50/p95/p99 latency instead of batch throughput")
+    ap.add_argument("--deadline-ms", type=float, default=25.0,
+                    help="per-request latency budget under --pipeline: a "
+                         "partial bucket dispatches when its oldest request "
+                         "has waited this long (0 = fill-only batching, no "
+                         "deadline flushes)")
+    ap.add_argument("--arrival-ms", type=float, default=1.0,
+                    help="inter-arrival gap of the paced open-loop stream "
+                         "under --pipeline")
     ap.add_argument("--replicate", action="store_true",
                     help="after warmup, replicate the hottest safe cut "
                          "features onto their queries' primary shards "
@@ -592,11 +999,15 @@ def main() -> None:
         adaptive = AdaptiveConfig(window=max(64, args.batch * 4),
                                   check_every=args.batch,
                                   min_requests=min(64, args.batch))
+    pipeline_cfg = PipelineConfig(
+        deadline_ms=args.deadline_ms if args.deadline_ms > 0 else None,
+        max_batch=args.batch)
     server = WorkloadServer(queries, part, join_impl=args.join,
                             max_per_row=args.max_per_row or None,
                             mesh=mesh, dedup=not args.no_dedup,
                             adaptive=adaptive, backend=args.backend,
-                            answer_cache=not args.no_cache)
+                            answer_cache=not args.no_cache,
+                            pipeline=pipeline_cfg)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
           f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
           f"{len(queries)} template queries in {server.n_buckets} buckets"
@@ -612,6 +1023,12 @@ def main() -> None:
     # migration recompiles only changed bucket signatures, mid-stream)
     for i in range(0, len(stream), args.batch):
         server.warmup(stream[i:i + args.batch])
+    if args.pipeline:
+        # deadline flushes cut partial batches: warm the small power-of-two
+        # batch shapes too, so a mid-stream flush never pays a compile
+        for n in (1, 2, 4, 8, 16, 32):
+            if n <= args.batch:
+                server.warmup(stream[:n])
 
     if args.replicate:
         rep = server.replicate_hot()
@@ -623,17 +1040,23 @@ def main() -> None:
             server.warmup(stream[i:i + args.batch])
 
     server.reset_stats()
-    t0 = time.perf_counter()
-    served = 0
-    n_solutions = 0
-    overflows = 0
-    while served < len(stream):
-        chunk = stream[served:served + args.batch]
-        for _, n, ovf in server.serve(chunk):
-            n_solutions += n
-            overflows += bool(ovf)
-        served += len(chunk)
-    dt = time.perf_counter() - t0
+    if args.pipeline:
+        dt, tickets = replay_paced(server, stream, args.arrival_ms / 1e3)
+        n_solutions = sum(t.result[1] for t in tickets)
+        overflows = sum(bool(t.result[2]) for t in tickets)
+        served = len(tickets)
+    else:
+        t0 = time.perf_counter()
+        served = 0
+        n_solutions = 0
+        overflows = 0
+        while served < len(stream):
+            chunk = stream[served:served + args.batch]
+            for _, n, ovf in server.serve(chunk):
+                n_solutions += n
+                overflows += bool(ovf)
+            served += len(chunk)
+        dt = time.perf_counter() - t0
 
     print(f"served {served} requests in {dt*1e3:.1f} ms  "
           f"({served/dt:,.0f} queries/sec, batch={args.batch})")
@@ -642,6 +1065,16 @@ def main() -> None:
     print(f"  solutions={n_solutions:,}  overflows={overflows}  "
           f"compiled engines={server.n_compiles}{per_epoch}  "
           f"dedup: {st['executed']}/{st['served']} instances executed")
+    if args.pipeline:
+        ls = server.latency_stats()
+        print(f"  latency: p50={ls['p50_ms']:.1f} p95={ls['p95_ms']:.1f} "
+              f"p99={ls['p99_ms']:.1f} mean={ls['mean_ms']:.1f} ms "
+              f"(arrival={args.arrival_ms}ms, deadline="
+              f"{args.deadline_ms or 'fill-only'}ms)")
+        print(f"  flushes: full={st['flush_full']} "
+              f"deadline={st['flush_deadline']} drain={st['flush_drain']}  "
+              f"queue_depth={server.queue_depth()} "
+              f"inflight={server.n_inflight}")
     if st["cache_hits"] or st["cache_misses"]:
         total = st["cache_hits"] + st["cache_misses"]
         print(f"  answer cache: {st['cache_hits']}/{total} hits "

@@ -17,7 +17,7 @@ from repro.core.partitioner import wawpart_partition
 from repro.engine.federated import ShardedKG, make_engine
 from repro.engine.planner import make_plan
 from repro.kg.workloads import lubm_queries
-from repro.launch.serve import WorkloadServer, request_stream
+from repro.launch.serve import Counter, WorkloadServer, request_stream
 
 
 @pytest.fixture(scope="module")
@@ -33,12 +33,12 @@ def test_cache_hit_after_repeat_and_parity_with_disabled(lubm_served):
     off = WorkloadServer(qs, part, answer_cache=False, cache=srv.cache)
     stream = request_stream(qs, 20)
     r1 = srv.serve(stream)
-    assert srv.stats["cache_hits"] == 0
-    assert srv.stats["cache_misses"] == 20
+    assert srv.stats[Counter.CACHE_HITS] == 0
+    assert srv.stats[Counter.CACHE_MISSES] == 20
     r2 = srv.serve(stream)
-    assert srv.stats["cache_hits"] == 20       # every repeat skips dispatch
+    assert srv.stats[Counter.CACHE_HITS] == 20       # every repeat skips dispatch
     r_off = off.serve(stream)
-    assert off.stats["cache_hits"] == off.stats["cache_misses"] == 0
+    assert off.stats[Counter.CACHE_HITS] == off.stats[Counter.CACHE_MISSES] == 0
     for a, b, c in zip(r1, r2, r_off):
         assert np.array_equal(a[0], b[0]) and a[1] == b[1] and a[2] == b[2]
         assert np.array_equal(a[0], c[0]) and a[1] == c[1] and a[2] == c[2]
@@ -49,10 +49,10 @@ def test_cache_hits_skip_engine_dispatch(lubm_served):
     srv = WorkloadServer(qs, part)
     stream = request_stream(qs, 14)
     srv.serve(stream)
-    executed = srv.stats["executed"]
+    executed = srv.stats[Counter.EXECUTED]
     srv.serve(stream)
-    assert srv.stats["executed"] == executed   # all-hit batch: no dispatch
-    assert srv.stats["cache_hits"] == 14
+    assert srv.stats[Counter.EXECUTED] == executed   # all-hit batch: no dispatch
+    assert srv.stats[Counter.CACHE_HITS] == 14
 
 
 def test_warmup_never_reads_or_fills_cache(lubm_served):
@@ -60,12 +60,12 @@ def test_warmup_never_reads_or_fills_cache(lubm_served):
     srv = WorkloadServer(qs, part)
     stream = request_stream(qs, 8)
     srv.warmup(stream)
-    assert srv.stats["cache_hits"] == srv.stats["cache_misses"] == 0
+    assert srv.stats[Counter.CACHE_HITS] == srv.stats[Counter.CACHE_MISSES] == 0
     srv.reset_stats()
     srv.serve(stream)
-    assert srv.stats["cache_hits"] == 0        # warmup filled nothing
+    assert srv.stats[Counter.CACHE_HITS] == 0        # warmup filled nothing
     srv.warmup(stream)
-    assert srv.stats["cache_hits"] == 0        # and reads nothing
+    assert srv.stats[Counter.CACHE_HITS] == 0        # and reads nothing
 
 
 def test_lru_capacity_bounds_cache(lubm_served):
@@ -75,9 +75,9 @@ def test_lru_capacity_bounds_cache(lubm_served):
     srv.serve(stream)
     assert len(srv._answers) == 2              # LRU evicted the older half
     srv.serve([stream[3]])
-    assert srv.stats["cache_hits"] == 1
+    assert srv.stats[Counter.CACHE_HITS] == 1
     srv.serve([stream[0]])                     # evicted: must re-miss
-    assert srv.stats["cache_misses"] == 5
+    assert srv.stats[Counter.CACHE_MISSES] == 5
 
 
 def test_migrate_epoch_bump_invalidates_cache(lubm_small, lubm_served):
@@ -93,20 +93,20 @@ def test_migrate_epoch_bump_invalidates_cache(lubm_small, lubm_served):
     stream = request_stream(qs, 14)
     srv.serve(stream)
     srv.serve(stream)
-    assert srv.stats["cache_hits"] == 14
+    assert srv.stats[Counter.CACHE_HITS] == 14
     res = incremental_repartition(part, qs, wb, budget_frac=0.15)
     srv.migrate(res.part)
     assert srv.epoch == 1
     srv.reset_stats()
     after = srv.serve(stream)
-    assert srv.stats["cache_hits"] == 0        # fully invalidated
-    assert srv.stats["cache_misses"] == 14
+    assert srv.stats[Counter.CACHE_HITS] == 0        # fully invalidated
+    assert srv.stats[Counter.CACHE_MISSES] == 14
     fresh = WorkloadServer(qs, res.part, answer_cache=False,
                            cache=srv.cache).serve(stream)
     for a, b in zip(after, fresh):
         assert np.array_equal(a[0], b[0]) and a[1] == b[1]
     srv.serve(stream)
-    assert srv.stats["cache_hits"] == 14       # refilled post-migration
+    assert srv.stats[Counter.CACHE_HITS] == 14       # refilled post-migration
 
 
 def test_replicate_hot_drops_collectives_keeps_results(lubm_served):
@@ -118,7 +118,7 @@ def test_replicate_hot_drops_collectives_keeps_results(lubm_served):
     stream = request_stream(qs, 28)
     before = srv.serve(stream)
     srv.serve(stream)
-    assert srv.stats["cache_hits"] == 28
+    assert srv.stats[Counter.CACHE_HITS] == 28
     rep = srv.replicate_hot()
     assert srv.epoch == 1 and rep["epoch"] == 1
     assert rep["replicated_triples"] > 0
@@ -128,7 +128,7 @@ def test_replicate_hot_drops_collectives_keeps_results(lubm_served):
     assert all(d >= 0 for d in drops) and any(d > 0 for d in drops)
     srv.reset_stats()
     after = srv.serve(stream)
-    assert srv.stats["cache_hits"] == 0        # epoch bump dropped the cache
+    assert srv.stats[Counter.CACHE_HITS] == 0        # epoch bump dropped the cache
     for a, b in zip(before, after):
         assert np.array_equal(a[0], b[0]) and a[1] == b[1]
 

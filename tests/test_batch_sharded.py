@@ -278,12 +278,62 @@ print("REPLICATE_SHARD_MAP_OK")
 """
 
 
+SCRIPT_PIPELINE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.core.partitioner import wawpart_partition
+from repro.kg.generator import generate_lubm
+from repro.kg.workloads import lubm_queries
+from repro.launch.mesh import make_engine_mesh
+from repro.launch.serve import (Counter, PipelineConfig, WorkloadServer,
+                                request_stream)
+
+# continuous-batching pipeline on a real mesh (ISSUE-7 acceptance, shard_map
+# half): deadline-flushed partial buckets through the shard_map engines must
+# be bit-identical to the synchronous vmap serve(), on jnp and pallas
+class FakeClock:
+    def __init__(self): self.t = 0.0
+    def __call__(self): return self.t
+
+store = generate_lubm(1, scale=0.08, seed=0)
+qs = lubm_queries()
+part = wawpart_partition(store, qs, n_shards=3)
+stream = request_stream(qs, 20)
+want = WorkloadServer(qs, part, answer_cache=False).serve(stream)
+
+for backend, n in (("jnp", 20), ("pallas", 6)):
+    clock = FakeClock()
+    srv = WorkloadServer(qs, part, mesh=make_engine_mesh(3),
+                         backend=backend, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=1.0,
+                                                 max_batch=64, clock=clock))
+    tickets = []
+    for name, pv in stream[:n]:
+        tickets.append(srv.submit(name, pv))
+        clock.t += 0.002                       # expire each deadline budget
+        srv.pump()
+    srv.drain()
+    assert srv.queue_depth() == 0 and srv.n_inflight == 0
+    assert srv.stats[Counter.FLUSH_DEADLINE] > 0, backend
+    assert all(t.done for t in tickets), backend
+    for t, (w, nw, ovw) in zip(tickets, want[:n]):
+        rows, cnt, ovf = t.result
+        assert cnt == nw and bool(ovf) == bool(ovw), (backend, t.name)
+        assert np.array_equal(rows, w), (backend, t.name)
+    ls = srv.latency_stats()
+    assert ls["n"] == n and ls["p99_ms"] > 0.0, (backend, ls)
+print("PIPELINE_SHARD_MAP_OK")
+"""
+
+
 @pytest.mark.parametrize("script,token", [
     (SCRIPT_DIFF, "BATCH_SHARD_MAP_OK"),
     (SCRIPT_SERVER, "SERVER_SHARD_MAP_OK"),
     (SCRIPT_MIGRATE, "MIGRATE_SHARD_MAP_OK"),
     (SCRIPT_PALLAS, "PALLAS_SHARD_MAP_OK"),
     (SCRIPT_REPLICATE, "REPLICATE_SHARD_MAP_OK"),
+    (SCRIPT_PIPELINE, "PIPELINE_SHARD_MAP_OK"),
 ])
 def test_batch_shard_map(script, token):
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}

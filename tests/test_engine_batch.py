@@ -280,7 +280,7 @@ def test_oversized_params_raise_clear_error(lubm_small):
 def test_server_scan_dedup_stats_and_equality(lubm_small):
     """WorkloadServer with dedup executes fewer instances than it serves and
     returns exactly the no-dedup results."""
-    from repro.launch.serve import WorkloadServer
+    from repro.launch.serve import Counter, WorkloadServer
 
     qs = lubm_queries()
     part = wawpart_partition(lubm_small, qs, n_shards=3)
@@ -292,10 +292,10 @@ def test_server_scan_dedup_stats_and_equality(lubm_small):
     for (ra, na, ova), (rb, nb, ovb) in zip(res_p, res_d):
         assert na == nb and ova == ovb
         assert np.array_equal(ra, rb)
-    assert plain.stats["executed"] == plain.stats["served"] == 24
-    assert dedup.stats["served"] == 24
-    assert dedup.stats["executed"] == 4                  # one per template
-    assert dedup.stats["deduped"] == 20
+    assert plain.stats[Counter.EXECUTED] == plain.stats[Counter.SERVED] == 24
+    assert dedup.stats[Counter.SERVED] == 24
+    assert dedup.stats[Counter.EXECUTED] == 4                  # one per template
+    assert dedup.stats[Counter.DEDUPED] == 20
 
 
 def test_run_batched_strict_raises_on_overflow(lubm_small):

@@ -1,0 +1,194 @@
+"""Continuous-batching pipeline edge cases (ISSUE-7 tentpole).
+
+The invariants this file owns:
+  * a deadline flush of a *partial* bucket (down to a single request) is
+    bit-identical to the synchronous serve() answer, on jnp and pallas;
+  * drain() is a real barrier — no queued requests, nothing in flight,
+    every ticket done;
+  * answer-cache hits bypass the queue entirely but still stamp the full
+    latency lifecycle;
+  * a migration epoch bump while requests sit in the queue re-routes them
+    through the new epoch's buckets — a stale-epoch plan never dispatches.
+
+Deadlines are driven by an injected fake clock (PipelineConfig.clock), so
+nothing here sleeps or depends on scheduler timing.
+"""
+import numpy as np
+import pytest
+
+from repro.core.partitioner import wawpart_partition
+from repro.kg.workloads import lubm_queries
+from repro.launch.serve import (Counter, PipelineConfig, WorkloadServer,
+                                request_stream)
+
+
+@pytest.fixture(scope="module")
+def lubm_served(lubm_small):
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    return qs, part
+
+
+class FakeClock:
+    """Deterministic monotonic clock the tests advance by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _eq(a, b):
+    return (np.array_equal(a[0], b[0]) and a[1] == b[1]
+            and bool(a[2]) == bool(b[2]))
+
+
+def test_deadline_flush_single_request_bit_identical(lubm_served):
+    """A deadline flush of a one-request partial bucket must equal the
+    synchronous answer bit-for-bit — the padding fillers are invisible."""
+    qs, part = lubm_served
+    clock = FakeClock()
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=10.0,
+                                                 max_batch=64, clock=clock))
+    sync = WorkloadServer(qs, part, answer_cache=False, cache=srv.cache)
+    for q in (qs[0], qs[7]):
+        ticket = srv.submit(q.name)
+        assert not ticket.done and srv.queue_depth() == 1
+        srv.pump()                       # budget not expired: still queued
+        assert srv.queue_depth() == 1
+        clock.advance(0.011)             # past the 10ms budget
+        srv.pump()                       # deadline flush of a 1-deep queue
+        assert srv.queue_depth() == 0
+        srv.drain()
+        assert ticket.done and ticket.flush_reason == "deadline"
+        (want,) = sync.serve([(q.name, None)])
+        assert _eq(ticket.result, want)
+    assert srv.stats[Counter.FLUSH_DEADLINE] == 2
+    assert srv.stats[Counter.FLUSH_FULL] == 0
+    # lifecycle stamps are monotone through the fake clock
+    assert (ticket.t_enqueue <= ticket.t_flush <= ticket.t_dispatch
+            <= ticket.t_done)
+
+
+def test_full_flush_at_max_batch(lubm_served):
+    qs, part = lubm_served
+    clock = FakeClock()
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=4, clock=clock))
+    name = qs[0].name
+    tickets = [srv.submit(name) for _ in range(7)]
+    assert srv.stats[Counter.FLUSH_FULL] == 1    # cut at the 4th submit
+    assert srv.queue_depth() == 3                # the remainder still queued
+    srv.drain()
+    assert srv.stats[Counter.FLUSH_DRAIN] == 1
+    assert all(t.done for t in tickets)
+
+
+def test_fill_only_never_deadline_flushes(lubm_served):
+    """deadline_ms=None is fill-only batching: requests wait for a full
+    bucket or a drain, no matter how far the clock advances."""
+    qs, part = lubm_served
+    clock = FakeClock()
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=64, clock=clock))
+    t = srv.submit(qs[0].name)
+    clock.advance(3600.0)
+    srv.pump()
+    assert srv.queue_depth() == 1 and not t.done
+    srv.drain()
+    assert t.done and t.flush_reason == "drain"
+    assert srv.stats[Counter.FLUSH_DEADLINE] == 0
+
+
+def test_drain_on_shutdown_leaves_nothing_queued(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=64))
+    stream = request_stream(qs, 17)              # several buckets, partial all
+    tickets = [srv.submit(n, p, _pump=False) for n, p in stream]
+    assert srv.queue_depth() == 17
+    done = srv.drain()
+    assert done == 17
+    assert srv.queue_depth() == 0 and srv.n_inflight == 0
+    assert all(t.done and t.result is not None for t in tickets)
+    # a second drain is a no-op barrier
+    assert srv.drain() == 0
+
+
+def test_cache_hit_bypasses_queue_but_stamps_latency(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=64))
+    name = qs[3].name
+    srv.serve([(name, None)])                    # fill the cache
+    n_before = srv.latency_stats()["n"]
+    t = srv.submit(name, _pump=False)
+    assert t.done and t.cache_hit and t.flush_reason == "hit"
+    assert srv.queue_depth() == 0                # never entered a queue
+    assert srv.stats[Counter.CACHE_HITS] == 1
+    assert t.t_done is not None and t.latency_s >= 0.0
+    assert srv.latency_stats()["n"] == n_before + 1
+    # and the bypass still returned the real answer
+    (want,) = srv.serve([(name, None)])
+    assert _eq(t.result, want)
+
+
+def test_migration_mid_queue_reroutes_no_stale_dispatch(lubm_served):
+    """Epoch bump with requests sitting in the queue: every queued request
+    must re-plan through the new epoch's buckets (ticket.epoch records the
+    dispatch epoch) and results must equal a fresh server on the new
+    placement."""
+    from repro.adaptive.repartition import incremental_repartition
+    from repro.launch.serve import two_phase_weights
+
+    qs, part = lubm_served
+    _wa, wb = two_phase_weights(qs)
+    res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=64))
+    stream = request_stream(qs, 14)
+    tickets = [srv.submit(n, p, _pump=False) for n, p in stream]
+    assert srv.queue_depth() == 14
+    srv.migrate(res.part)                        # bump while all are queued
+    assert srv.epoch == 1
+    srv.drain()
+    assert all(t.done and t.epoch == 1 for t in tickets)
+    fresh = WorkloadServer(qs, res.part, answer_cache=False,
+                           cache=srv.cache).serve(stream)
+    for t, want in zip(tickets, fresh):
+        assert _eq(t.result, want)
+
+
+def test_pipeline_bit_identical_jnp_and_pallas_vmap(lubm_served):
+    """Deadline-flushed pipeline results equal synchronous serve() on both
+    backends (the vmap half of the ISSUE-7 acceptance differential; the
+    shard_map half lives in test_batch_sharded.SCRIPT_PIPELINE)."""
+    qs, part = lubm_served
+    stream = [(qs[i].name, None) for i in range(6)]
+    clock = FakeClock()
+    cfg = PipelineConfig(deadline_ms=1.0, max_batch=64, clock=clock)
+    sync = WorkloadServer(qs, part, answer_cache=False)
+    want = sync.serve(stream)
+    for backend in ("jnp", "pallas"):
+        srv = WorkloadServer(qs, part, answer_cache=False, backend=backend,
+                             pipeline=cfg,
+                             cache=sync.cache if backend == "jnp" else None)
+        tickets = []
+        for name, pv in stream:
+            tickets.append(srv.submit(name, pv))
+            clock.advance(0.002)                 # expire each budget
+            srv.pump()
+        srv.drain()
+        assert srv.stats[Counter.FLUSH_DEADLINE] > 0
+        for t, w in zip(tickets, want):
+            assert _eq(t.result, w), (backend, t.name)

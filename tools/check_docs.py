@@ -1,0 +1,133 @@
+"""Docs gate (CI "docs" job): the documentation must not rot.
+
+Checks, in order:
+  1. every intra-repo markdown link in README.md and docs/*.md resolves —
+     the target file exists, and a #fragment (same-file or cross-file)
+     matches a real heading under GitHub's anchor slugification;
+  2. the test inventory in docs/architecture.md matches the test files
+     pytest actually collects (``pytest --collect-only``) — a new test
+     file must be documented, a deleted one must be dropped;
+  3. every section and BENCH_*.json artifact printed by
+     ``benchmarks/run.py --list`` is mentioned in docs/benchmarks.md.
+
+Run from the repo root: ``PYTHONPATH=src python tools/check_docs.py``
+(``--no-collect`` skips the pytest step for fast local iteration).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ["README.md", "docs/architecture.md", "docs/benchmarks.md"]
+
+# [text](target) — excluding images; good enough for our hand-written docs
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor rule: lowercase, drop punctuation
+    (keeping word chars, hyphens, spaces), spaces become hyphens."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def doc_anchors(path: str) -> set[str]:
+    with open(path) as f:
+        return {github_slug(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_links() -> list[str]:
+    errors = []
+    for doc in DOC_FILES:
+        doc_abs = os.path.join(REPO, doc)
+        with open(doc_abs) as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, frag = target.partition("#")
+            if path:
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(doc_abs), path))
+                if not os.path.exists(resolved):
+                    errors.append(f"{doc}: broken link -> {target}")
+                    continue
+            else:
+                resolved = doc_abs
+            if frag and resolved.endswith(".md"):
+                if frag not in doc_anchors(resolved):
+                    errors.append(f"{doc}: dead anchor -> {target}")
+    return errors
+
+
+def check_test_inventory(collect: bool) -> list[str]:
+    with open(os.path.join(REPO, "docs/architecture.md")) as f:
+        text = f.read()
+    documented = set(re.findall(r"`(tests/test_\w+\.py)`", text))
+    if not documented:
+        return ["docs/architecture.md: test inventory section is empty"]
+    if collect:
+        env = {**os.environ,
+               "PYTHONPATH": os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", "")}
+        out = subprocess.run(
+            [sys.executable, "-m", "pytest", "--collect-only", "-q"],
+            capture_output=True, text=True, cwd=REPO, env=env, timeout=560)
+        collected = {line.split("::", 1)[0] for line in out.stdout.splitlines()
+                     if line.startswith("tests/") and "::" in line}
+        if not collected:
+            return ["pytest --collect-only found no tests:\n"
+                    + out.stdout[-1000:] + out.stderr[-1000:]]
+    else:
+        collected = {f"tests/{f}" for f in os.listdir(os.path.join(
+            REPO, "tests")) if re.fullmatch(r"test_\w+\.py", f)}
+    errors = []
+    for f in sorted(collected - documented):
+        errors.append(f"docs/architecture.md: collected test file {f} "
+                      "missing from the test inventory")
+    for f in sorted(documented - collected):
+        errors.append(f"docs/architecture.md: inventory lists {f}, "
+                      "which pytest does not collect")
+    return errors
+
+
+def check_bench_listing() -> list[str]:
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks/run.py"), "--list"],
+        capture_output=True, text=True, cwd=REPO, timeout=120)
+    if out.returncode != 0:
+        return [f"benchmarks/run.py --list failed:\n{out.stderr[-1000:]}"]
+    tokens = re.findall(r"[\w.]+", out.stdout)
+    names = {t for t in tokens
+             if t.startswith("bench_") or t.startswith("BENCH_")}
+    with open(os.path.join(REPO, "docs/benchmarks.md")) as f:
+        doc = f.read()
+    return [f"docs/benchmarks.md: {name} (from benchmarks/run.py --list) "
+            "is undocumented" for name in sorted(names) if name not in doc]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-collect", action="store_true",
+                    help="glob tests/ instead of running pytest "
+                         "--collect-only (fast local mode)")
+    args = ap.parse_args()
+
+    errors = check_links()
+    errors += check_test_inventory(collect=not args.no_collect)
+    errors += check_bench_listing()
+    for e in errors:
+        print(f"DOCS ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print("docs check: links, test inventory, and bench listing OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
