@@ -38,6 +38,26 @@ def _steady(fn, iters: int) -> float:
     return best
 
 
+def _metrics_note(server) -> dict:
+    """Distill a server's telemetry into the explanatory sub-dict the
+    BENCH rows carry: why a qps number moved (cache efficacy, flush mix,
+    per-bucket collectives == WawPart cuts, per-bucket executed counts).
+    Schema documented in docs/benchmarks.md ("metrics sub-dict")."""
+    st = server.stats
+    snap = server.telemetry.snapshot()
+    executed = {s["labels"]["bucket"]: s["value"]
+                for s in snap["executed"]["series"]}
+    lookups = st["cache_hits"] + st["cache_misses"]
+    return {
+        "cache_hit_rate": (st["cache_hits"] / lookups) if lookups else None,
+        "flush_reasons": {"full": st["flush_full"],
+                          "deadline": st["flush_deadline"],
+                          "drain": st["flush_drain"]},
+        "cut_collectives": [int(c) for c in server.collective_counts()],
+        "executed_per_bucket": executed,
+    }
+
+
 def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
         max_per_row: int = 64, methods: tuple[str, ...] = METHODS,
         n_shards: int = 3, sharded: bool = True) -> dict:
@@ -119,6 +139,10 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
                 "compiles": server.n_compiles, "buckets": server.n_buckets}
         assert server.n_compiles <= server.n_buckets, \
             (server.n_compiles, server.n_buckets)
+        # one instrumented pass: the telemetry sub-dict explaining the row
+        server.reset_stats()
+        bucketed(64)
+        rows["batch64"]["metrics"] = _metrics_note(server)
 
         # -- batch=64 with scan-dedup (identical requests collapse) --------
         dd = WorkloadServer(queries, part, cache=server.cache,
@@ -137,7 +161,8 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
         rows["batch64_dedup"] = {
             "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
             "compiles": dd.n_compiles,
-            "executed_per_64": dd.stats["executed"]}
+            "executed_per_64": dd.stats["executed"],
+            "metrics": _metrics_note(dd)}
 
         # -- shard_map on a real mesh: one device per shard ----------------
         if sharded and len(jax.devices()) >= part.n_shards:
@@ -156,11 +181,14 @@ def run(scale: float = 0.1, n_requests: int = 64, iters: int = 3,
                     sm.serve(stream[i:i + 64])
 
             dt = _steady(sharded_64, iters)
+            sm.reset_stats()
+            sharded_64()
             rows["batch64_shard_map"] = {
                 "qps": n_requests / dt, "us_per_req": dt / n_requests * 1e6,
                 "compiles": sm.n_compiles,
                 "collectives": sm.collective_counts(),
-                "devices": part.n_shards}
+                "devices": part.n_shards,
+                "metrics": _metrics_note(sm)}
         elif sharded:
             print(f"serve/{method}/batch64_shard_map,skipped,"
                   f"need_{part.n_shards}_devices_have_{len(jax.devices())}",
@@ -345,6 +373,7 @@ def run_latency(scale: float = 0.1, n_requests: int = 96,
             "flush_full": srv.stats["flush_full"],
             "flush_deadline": srv.stats["flush_deadline"],
             "flush_drain": srv.stats["flush_drain"],
+            "metrics": _metrics_note(srv),
             "parity": True}
 
     if None in deadlines_ms:

@@ -107,6 +107,13 @@ class AdaptiveController:
         snap = self.tracker.snapshot()
         report = self.detector.check(self.baseline, snap,
                                      known=self._known_templates())
+        tele = getattr(self.server, "telemetry", None)
+        if tele is not None:
+            tele.count("drift_checks", severity=report.severity)
+            tele.trace.instant(
+                f"drift/{report.severity}",
+                args={"divergence": round(report.divergence, 4),
+                      "window": snap.total})
         if not report.drifted:
             return None
 

@@ -645,6 +645,18 @@ class EngineCache:
         return fn
 
 
+def engine_cost(fn, *args) -> dict:
+    """XLA cost-analysis properties for a jitted engine on concrete args.
+
+    Lowers and compiles ``fn`` for the given argument shapes (a cache hit
+    inside XLA when the engine already ran on them) and returns the
+    normalized ``cost_analysis`` dict — keys of interest are ``"flops"``
+    and ``"bytes accessed"``. Feeds the telemetry ``engine_flops`` /
+    ``engine_bytes`` gauges (see docs/observability.md)."""
+    from repro.launch.dryrun import cost_dict
+    return cost_dict(fn.lower(*args).compile())
+
+
 # ---------------------------------------------------------------------------
 # batch assembly + execution
 # ---------------------------------------------------------------------------

@@ -32,13 +32,14 @@ import argparse
 import enum
 import time
 from collections import OrderedDict, deque
-from contextlib import contextmanager
+from contextlib import contextmanager, nullcontext
 from dataclasses import dataclass, field
 from typing import Callable, NamedTuple
 
 import numpy as np
 
 from repro.core.features import pattern_feature
+from repro.obs import DEFAULT_CLOCK, Telemetry
 from repro.core.partitioner import (Partitioning, centralized_partition,
                                     random_partition, wawpart_partition)
 from repro.engine.batch import (EngineCache, bucket_collectives, bucket_plans,
@@ -58,7 +59,9 @@ class Counter(str, enum.Enum):
     benches import this instead of re-spelling strings (each member *is*
     its string value, so ``stats[Counter.SERVED]`` and ``stats["served"]``
     hit the same entry). Each counter's meaning is documented in
-    docs/architecture.md ("Stats counters").
+    docs/architecture.md ("Stats counters"). ``stats`` is the flat
+    back-compat view; the labeled per-bucket/per-template series live in
+    the server's ``telemetry`` registry (see docs/observability.md).
     """
 
     SERVED = "served"                  # requests delivered (hits + executed)
@@ -69,11 +72,6 @@ class Counter(str, enum.Enum):
     FLUSH_FULL = "flush_full"          # dispatches cut by a full bucket queue
     FLUSH_DEADLINE = "flush_deadline"  # dispatches cut by a deadline expiry
     FLUSH_DRAIN = "flush_drain"        # dispatches cut by drain()/serve()
-
-
-def _fresh_stats() -> dict[str, int]:
-    """A zeroed stats dict with one entry per ``Counter`` member."""
-    return {c.value: 0 for c in Counter}
 
 
 @dataclass(frozen=True)
@@ -89,13 +87,16 @@ class PipelineConfig:
         2 is classic double buffering (stage/submit batch k+1 while batch
         k computes on device); 1 degenerates to synchronous dispatch.
     clock: monotonic time source; injectable so tests drive deadlines
-        deterministically without sleeping.
+        deterministically without sleeping. The server's telemetry
+        recorder adopts this clock, so trace spans, latency stats, and
+        the CLI timing all share one timebase (obs.DEFAULT_CLOCK ==
+        time.monotonic).
     """
 
     deadline_ms: float | None = 25.0
     max_batch: int = 64
     max_inflight: int = 2
-    clock: Callable[[], float] = time.monotonic
+    clock: Callable[[], float] = DEFAULT_CLOCK
 
 
 @dataclass
@@ -137,6 +138,7 @@ class Ticket:
 class _Inflight(NamedTuple):
     """One dispatched-but-unextracted batch (the pipeline's device leg)."""
     bucket: object
+    bi: int                           # bucket index (telemetry label/lane)
     tickets: list                     # Tickets in flush order
     unique: list                      # deduped (plan_idx, params) requests
     inverse: list | None              # fan-out map, None when dedup is off
@@ -223,8 +225,14 @@ class WorkloadServer:
                  mesh=None, dedup: bool = True, adaptive=None,
                  answer_cache: bool | int = True,
                  backend: str = "jnp", kernel_blocks=None,
-                 pipeline: PipelineConfig | None = None):
+                 pipeline: PipelineConfig | None = None,
+                 telemetry: Telemetry | None = None):
         """Build the serving state for `part` and compile nothing yet.
+
+        `telemetry` attaches an observability bundle (labeled metrics +
+        trace recorder + profiler annotations, see repro.obs); omitted, a
+        default all-off `Telemetry` still backs the `stats` counters. The
+        recorder adopts the pipeline's injected clock.
 
         Raises ValueError on an unknown backend or invalid kernel_blocks
         (via `check_backend`); engine compilation happens lazily on the
@@ -240,9 +248,10 @@ class WorkloadServer:
         self.cache = cache if cache is not None else EngineCache()
         self.mesh = mesh
         self.dedup = dedup
-        self.stats = _fresh_stats()
         self.params_spec = params_spec or {}
         self.pipeline = pipeline if pipeline is not None else PipelineConfig()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.telemetry.bind_clock(self.pipeline.clock)
         self._track = True
         self.answer_cache_cap = (self.ANSWER_CACHE_CAP if answer_cache is True
                                  else int(answer_cache))
@@ -259,6 +268,7 @@ class WorkloadServer:
                                    params=self.params_spec.get(q.name))
                  for q in self.queries}
         self._state = self._build_state(0, part, ShardedKG.build(part), plans)
+        self._refresh_obs()
 
         self.adaptive = None
         if adaptive is not None and adaptive is not False:
@@ -323,10 +333,56 @@ class WorkloadServer:
         """Engines built so far through this server's (shared) EngineCache."""
         return self.cache.misses
 
+    @property
+    def stats(self) -> dict[str, int]:
+        """Flat counter totals keyed by `Counter` value — the historical
+        stats-dict view, now backed by the telemetry registry (labels
+        summed out; per-bucket/per-template series live in
+        `telemetry.snapshot()`). Both ``stats[Counter.SERVED]`` and
+        ``stats["served"]`` work, as before."""
+        return {c.value: int(self.telemetry.total(c.value)) for c in Counter}
+
     def collective_counts(self) -> list[int]:
         """Per-bucket cross-shard gather sites in the compiled engines — the
         bucket-level WawPart cut counts (0 = collective-free program)."""
         return [bucket_collectives(b.signature) for b in self._state.buckets]
+
+    def _refresh_obs(self) -> None:
+        """Re-publish the state gauges (epoch, per-bucket cut collectives)
+        for the current serving state; called at init and on every epoch
+        bump since buckets can change count and signature."""
+        tele = self.telemetry
+        tele.gauge("epoch", self._state.epoch)
+        tele.registry["cut_collectives"].clear()
+        for bi, b in enumerate(self._state.buckets):
+            tele.gauge("cut_collectives", bucket_collectives(b.signature),
+                       bucket=str(bi))
+
+    def record_engine_costs(self) -> dict[str, list[float]]:
+        """Publish XLA ``cost_analysis`` FLOPs/bytes per bucket engine.
+
+        Lowers each bucket's engine on a minimal (padded batch 1) staged
+        request and sets the `engine_flops`/`engine_bytes` gauges.
+        Returns {"flops": [...], "bytes": [...]} in bucket order. Costs
+        are per-dispatch at that minimal batch shape — a relative
+        weight across buckets, not a throughput prediction.
+        """
+        from repro.engine.batch import engine_cost
+        st = self._state
+        flops: list[float] = []
+        nbytes: list[float] = []
+        for bi, bucket in enumerate(st.buckets):
+            fn = self._engine(bucket)
+            pd, params = stage_batch(bucket, pad_requests_pow2([(0, None)]),
+                                     mesh=self.mesh)
+            cost = engine_cost(fn, st.tr, st.va, st.perms, pd, params)
+            f = float(cost.get("flops", 0.0) or 0.0)
+            b = float(cost.get("bytes accessed", 0.0) or 0.0)
+            self.telemetry.gauge("engine_flops", f, bucket=str(bi))
+            self.telemetry.gauge("engine_bytes", b, bucket=str(bi))
+            flops.append(f)
+            nbytes.append(b)
+        return {"flops": flops, "bytes": nbytes}
 
     # ---- migration -----------------------------------------------------
 
@@ -399,6 +455,12 @@ class WorkloadServer:
         self._state = new_state
         self._answers.clear()        # every cached answer is pre-migration
         self._answers_epoch = new_state.epoch
+        self._refresh_obs()
+        self.telemetry.count("epoch_bumps", kind="migrate")
+        self.telemetry.trace.instant(
+            "migration", args={"epoch": new_state.epoch,
+                               "n_moved": mig.n_moved,
+                               "plans_rewritten": rewritten})
         return {"epoch": new_state.epoch, "n_moved": mig.n_moved,
                 "moved_fraction": mig.moved_fraction,
                 "plans_rewritten": rewritten,
@@ -475,6 +537,11 @@ class WorkloadServer:
         self._state = new_state
         self._answers.clear()        # pre-replication answers are stale
         self._answers_epoch = new_state.epoch
+        self._refresh_obs()
+        self.telemetry.count("epoch_bumps", kind="replicate")
+        self.telemetry.trace.instant(
+            "replication", args={"epoch": new_state.epoch,
+                                 "replicated_triples": report.total_triples})
         out.update(
             epoch=new_state.epoch,
             replicated_units=sum(len(ts) for ts in report.replicas.values()),
@@ -506,11 +573,17 @@ class WorkloadServer:
         now = self.pipeline.clock()
         self._sync_queues()
         st = self._state
+        tele = self.telemetry
         bi, pi = st.route[name]
+        plan = st.buckets[bi].plans[pi]
         # cache hits still feed the tracker: drift detection must see
         # the real mix even at high hit rates
-        if self.adaptive is not None and self._track:
-            self.adaptive.record(name, st.buckets[bi].plans[pi])
+        if self._track:
+            if self.adaptive is not None:
+                self.adaptive.record(name, plan)
+            if plan.cut_steps:
+                tele.count("observed_cut_joins", len(plan.cut_steps),
+                           template=name)
         # validate params eagerly — an oversized vector must fail at
         # submit, not at a deadline flush long after the caller moved on
         key = (name, canonical_params(params, st.buckets[bi].n_params))
@@ -537,14 +610,25 @@ class WorkloadServer:
                 ticket.epoch = st.epoch
                 ticket.t_flush = ticket.t_dispatch = ticket.t_done = \
                     self.pipeline.clock()
-                self.stats[Counter.SERVED] += 1
-                self.stats[Counter.CACHE_HITS] += 1
+                tele.count("served", template=name)
+                tele.count("cache_hits", template=name)
+                tele.observe("request_latency_ms",
+                             (ticket.t_done - ticket.t_enqueue) * 1e3)
+                if tele.trace.enabled:
+                    span = f"ticket/{name}"
+                    tele.trace.async_begin(span, ticket.seq,
+                                           ts=ticket.t_enqueue,
+                                           args={"cache_hit": True,
+                                                 "epoch": st.epoch})
+                    tele.trace.async_end(span, ticket.seq,
+                                         ts=ticket.t_done)
                 self._latencies.append((ticket.t_enqueue, ticket.t_flush,
                                         ticket.t_dispatch, ticket.t_done))
                 return ticket
-            self.stats[Counter.CACHE_MISSES] += 1
+            tele.count("cache_misses", template=name)
 
         self._queues.setdefault(bi, []).append(ticket)
+        tele.gauge("queue_depth", len(self._queues[bi]), bucket=str(bi))
         if _pump:
             self.pump()
         return ticket
@@ -561,7 +645,7 @@ class WorkloadServer:
         synchronous path's between-batches cadence.
         """
         self._sync_queues()
-        before = self.stats[Counter.SERVED]
+        before = int(self.telemetry.total("served"))
         now = self.pipeline.clock()
         for bi in list(self._queues):
             while len(self._queues.get(bi, ())) >= self.pipeline.max_batch:
@@ -575,7 +659,8 @@ class WorkloadServer:
             if due is not None and now >= due:
                 self._flush(bi, "deadline", now)
         self._retire()
-        done = self.stats[Counter.SERVED] - before
+        self.telemetry.gauge("inflight", len(self._inflight))
+        done = int(self.telemetry.total("served")) - before
         if done and self.adaptive is not None and self._track:
             self.adaptive.maybe_adapt()
         return done
@@ -587,17 +672,22 @@ class WorkloadServer:
         Ticket is done, `queue_depth()` is 0, and nothing is in flight.
         Each bucket's remaining queue dispatches as one batch (reason
         "drain", however partial). Returns the number of requests
-        completed by this call.
+        completed by this call. With everything settled, the telemetry
+        counter invariants from docs/architecture.md are enforced
+        (`Telemetry.check_invariants`) — a RuntimeError here means a
+        serving-path accounting bug, not bad user input.
         """
         self._sync_queues()
-        before = self.stats[Counter.SERVED]
+        before = int(self.telemetry.total("served"))
         now = self.pipeline.clock()
         for bi in list(self._queues):
             if self._queues.get(bi):
                 self._flush(bi, "drain", now)
         while self._inflight:
             self._complete(self._inflight.popleft())
-        return self.stats[Counter.SERVED] - before
+        self.telemetry.gauge("inflight", 0)
+        self.telemetry.check_invariants()
+        return int(self.telemetry.total("served")) - before
 
     def queue_depth(self) -> int:
         """Requests enqueued but not yet flushed into a dispatch."""
@@ -675,7 +765,14 @@ class WorkloadServer:
             del self._queues[bi]
 
         st = self._state
+        tele = self.telemetry
+        tr = tele.trace
         bucket = st.buckets[bi]
+        b_lab = str(bi)
+        tele.gauge("queue_depth", len(rest), bucket=b_lab)
+        tele.count(f"flush_{reason}", bucket=b_lab)
+        tele.observe("batch_fill_ratio",
+                     len(take) / self.pipeline.max_batch, bucket=b_lab)
         for t in take:
             t.t_flush = now
             t.flush_reason = reason
@@ -684,19 +781,30 @@ class WorkloadServer:
             unique, inverse = dedup_requests(reqs, bucket.n_params)
         else:
             unique, inverse = reqs, None
+        tele.observe("dedup_fanout", len(take) / len(unique), bucket=b_lab)
         fn = self._engine(bucket)
+        t_stage = tr.clock() if tr.enabled else now
         pd, params = stage_batch(bucket, pad_requests_pow2(unique),
                                  mesh=self.mesh)
-        out = fn(st.tr, st.va, st.perms, pd, params)
+        t_call = tr.clock() if tr.enabled else now
+        with tele.annotation(f"dispatch/bucket{bi}"):
+            out = fn(st.tr, st.va, st.perms, pd, params)
         t_dispatch = self.pipeline.clock()
+        if tr.enabled:
+            lane = f"bucket{bi}"
+            tr.complete(f"flush/{reason}", now, t_dispatch, tid=lane,
+                        args={"n": len(take), "unique": len(unique),
+                              "epoch": st.epoch})
+            tr.complete("stage", t_stage, t_call, tid=lane)
+            tr.complete("dispatch", t_call, t_dispatch, tid=lane)
         for t in take:
             t.t_dispatch = t_dispatch
             t.epoch = st.epoch
-        self.stats[Counter(f"flush_{reason}")] += 1
-        self._inflight.append(_Inflight(bucket, take, unique, inverse, out,
-                                        st.epoch))
+        self._inflight.append(_Inflight(bucket, bi, take, unique, inverse,
+                                        out, st.epoch))
         while len(self._inflight) > self.pipeline.max_inflight:
             self._complete(self._inflight.popleft())
+        tele.gauge("inflight", len(self._inflight))
 
     def _retire(self) -> int:
         """Complete in-flight batches whose device results are ready.
@@ -725,6 +833,9 @@ class WorkloadServer:
         """
         import jax
 
+        tele = self.telemetry
+        tr = tele.trace
+        t_retire = tr.clock() if tr.enabled else None
         jax.block_until_ready(rec.out)
         if rec.inverse is None:
             extracted = extract_batch(rec.bucket, rec.unique, *rec.out)
@@ -734,13 +845,27 @@ class WorkloadServer:
         now = self.pipeline.clock()
         fill = (self.answer_cache_cap > 0 and not self._cache_bypass
                 and rec.epoch == self._state.epoch)
-        self.stats[Counter.SERVED] += len(rec.tickets)
-        self.stats[Counter.EXECUTED] += len(rec.unique)
-        self.stats[Counter.DEDUPED] += len(rec.tickets) - len(rec.unique)
+        b_lab = str(rec.bi)
+        tele.count("executed", len(rec.unique), bucket=b_lab)
+        if len(rec.tickets) > len(rec.unique):
+            tele.count("deduped", len(rec.tickets) - len(rec.unique),
+                       bucket=b_lab)
+        if tr.enabled:
+            tr.complete("retire", t_retire, now, tid=f"bucket{rec.bi}",
+                        args={"n": len(rec.tickets), "epoch": rec.epoch})
         for t, res in zip(rec.tickets, extracted):
             t.result = res
             t.t_done = now
             t.done = True
+            tele.count("served", template=t.name)
+            tele.observe("request_latency_ms",
+                         (t.t_done - t.t_enqueue) * 1e3)
+            if tr.enabled:
+                span = f"ticket/{t.name}"
+                tr.async_begin(span, t.seq, ts=t.t_enqueue,
+                               args={"flush": t.flush_reason,
+                                     "epoch": t.epoch})
+                tr.async_end(span, t.seq, ts=t.t_done)
             self._latencies.append((t.t_enqueue, t.t_flush, t.t_dispatch,
                                     t.t_done))
             if fill:
@@ -809,8 +934,13 @@ class WorkloadServer:
             self._cache_bypass = bypass
 
     def reset_stats(self) -> None:
-        """Zero every stats counter and drop the recorded latencies."""
-        self.stats = _fresh_stats()
+        """Zero every stats counter (and histogram), drop the recorded
+        latencies, and clear the trace buffer — the steady-state
+        measurement boundary after warmup. State gauges (epoch, cut
+        collectives, engine costs) persist: they describe the current
+        serving state, not accumulated traffic."""
+        self.telemetry.reset_counters()
+        self.telemetry.trace.clear()
         self._latencies.clear()
 
 
@@ -886,17 +1016,20 @@ def replay_paced(server: WorkloadServer, stream, arrival_s: float,
     """Feed `stream` through the pipeline at one request per `arrival_s`.
 
     The open-loop load generator the latency bench and --pipeline share:
-    arrivals are paced on the wall clock (the offered load is fixed, not
-    adapted to service speed), the server is pumped while waiting so
-    deadline flushes and in-flight retirement happen on time, and a final
-    drain() delivers everything. Returns (elapsed seconds, tickets).
+    arrivals are paced on the server's pipeline clock (the offered load
+    is fixed, not adapted to service speed) — the same injectable
+    timebase the tickets, latency stats, and trace spans use — the
+    server is pumped while waiting so deadline flushes and in-flight
+    retirement happen on time, and a final drain() delivers everything.
+    Returns (elapsed seconds, tickets).
     """
+    clock = server.pipeline.clock
     tickets: list[Ticket] = []
-    t0 = time.monotonic()
+    t0 = clock()
     t_next = t0
     for name, pv in stream:
         while True:
-            now = time.monotonic()
+            now = clock()
             if now >= t_next:
                 break
             server.pump()
@@ -904,7 +1037,7 @@ def replay_paced(server: WorkloadServer, stream, arrival_s: float,
         tickets.append(server.submit(name, pv))
         t_next += arrival_s
     server.drain()
-    return time.monotonic() - t0, tickets
+    return clock() - t0, tickets
 
 
 def main() -> None:
@@ -962,6 +1095,19 @@ def main() -> None:
                          "halfway (instead of round-robin)")
     ap.add_argument("--seed", type=int, default=0,
                     help="stream sampling seed (weighted/drifting streams)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the request lifecycle and write a "
+                         "Chrome-trace-event JSON file after serving "
+                         "(open at https://ui.perfetto.dev — see "
+                         "docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot after serving: "
+                         "Prometheus text exposition when PATH ends in "
+                         ".prom, JSON otherwise")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the serving loop in jax.profiler.trace(DIR) "
+                         "for an XLA-level profile (TensorBoard/Perfetto) "
+                         "alongside the app-level --trace-out")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -990,26 +1136,31 @@ def main() -> None:
         stream = request_stream(queries, args.requests)
         phase_a_weights = None
 
-    t0 = time.time()
+    pipeline_cfg = PipelineConfig(
+        deadline_ms=args.deadline_ms if args.deadline_ms > 0 else None,
+        max_batch=args.batch)
+    clock = pipeline_cfg.clock   # one timebase: partition timing, serving
+    #                              timing, tickets, and trace spans agree
+    t0 = clock()
     part = build_partition(args.method, store, queries, args.n_shards,
                            query_weights=phase_a_weights)
+    t_part = clock() - t0
     adaptive = None
     if args.adaptive:
         from repro.adaptive.controller import AdaptiveConfig
         adaptive = AdaptiveConfig(window=max(64, args.batch * 4),
                                   check_every=args.batch,
                                   min_requests=min(64, args.batch))
-    pipeline_cfg = PipelineConfig(
-        deadline_ms=args.deadline_ms if args.deadline_ms > 0 else None,
-        max_batch=args.batch)
+    telemetry = Telemetry(trace=args.trace_out is not None,
+                          annotate=args.profile is not None)
     server = WorkloadServer(queries, part, join_impl=args.join,
                             max_per_row=args.max_per_row or None,
                             mesh=mesh, dedup=not args.no_dedup,
                             adaptive=adaptive, backend=args.backend,
                             answer_cache=not args.no_cache,
-                            pipeline=pipeline_cfg)
+                            pipeline=pipeline_cfg, telemetry=telemetry)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
-          f"{part.shard_sizes.tolist()} ({time.time()-t0:.1f}s partitioning), "
+          f"{part.shard_sizes.tolist()} ({t_part:.1f}s partitioning), "
           f"{len(queries)} template queries in {server.n_buckets} buckets"
           + (f", shard_map on mesh {dict(mesh.shape)}" if mesh is not None
              else "")
@@ -1039,24 +1190,34 @@ def main() -> None:
         for i in range(0, len(stream), args.batch):
             server.warmup(stream[i:i + args.batch])
 
+    if args.metrics_out:
+        # per-bucket cost_analysis gauges ride along in the snapshot;
+        # engines are already compiled (warmup), lowering is cheap
+        server.record_engine_costs()
+
     server.reset_stats()
-    if args.pipeline:
-        dt, tickets = replay_paced(server, stream, args.arrival_ms / 1e3)
-        n_solutions = sum(t.result[1] for t in tickets)
-        overflows = sum(bool(t.result[2]) for t in tickets)
-        served = len(tickets)
-    else:
-        t0 = time.perf_counter()
-        served = 0
-        n_solutions = 0
-        overflows = 0
-        while served < len(stream):
-            chunk = stream[served:served + args.batch]
-            for _, n, ovf in server.serve(chunk):
-                n_solutions += n
-                overflows += bool(ovf)
-            served += len(chunk)
-        dt = time.perf_counter() - t0
+    profile_ctx = nullcontext()
+    if args.profile:
+        import jax
+        profile_ctx = jax.profiler.trace(args.profile)
+    with profile_ctx:
+        if args.pipeline:
+            dt, tickets = replay_paced(server, stream, args.arrival_ms / 1e3)
+            n_solutions = sum(t.result[1] for t in tickets)
+            overflows = sum(bool(t.result[2]) for t in tickets)
+            served = len(tickets)
+        else:
+            t0 = clock()
+            served = 0
+            n_solutions = 0
+            overflows = 0
+            while served < len(stream):
+                chunk = stream[served:served + args.batch]
+                for _, n, ovf in server.serve(chunk):
+                    n_solutions += n
+                    overflows += bool(ovf)
+                served += len(chunk)
+            dt = clock() - t0
 
     print(f"served {served} requests in {dt*1e3:.1f} ms  "
           f"({served/dt:,.0f} queries/sec, batch={args.batch})")
@@ -1091,6 +1252,15 @@ def main() -> None:
                   + (f", rewrote {mig['plans_rewritten']} plans, "
                      f"reused {mig['signatures_reused']} engine sigs"
                      if mig else ""))
+    if args.trace_out:
+        telemetry.dump_trace(args.trace_out)
+        print(f"  trace: {len(telemetry.trace)} events "
+              f"({telemetry.trace.dropped} dropped) -> {args.trace_out}")
+    if args.metrics_out:
+        telemetry.dump_metrics(args.metrics_out)
+        print(f"  metrics snapshot -> {args.metrics_out}")
+    if args.profile:
+        print(f"  jax profiler trace -> {args.profile}")
 
 
 if __name__ == "__main__":

@@ -323,6 +323,44 @@ for backend, n in (("jnp", 20), ("pallas", 6)):
         assert np.array_equal(rows, w), (backend, t.name)
     ls = srv.latency_stats()
     assert ls["n"] == n and ls["p99_ms"] > 0.0, (backend, ls)
+
+# telemetry on the shard_map path (ISSUE-8 acceptance): the traced pipeline
+# exports a ticket span per request, and the per-bucket cut_collectives
+# gauges equal both bucket_collectives(signature) and the lowered-HLO
+# collective count (HLO shows start+done pairs, hence the factor 2)
+import jax.numpy as jnp
+from repro.engine.batch import (assemble_batch, bucket_collectives,
+                                count_hlo_collectives)
+from repro.obs import Telemetry
+
+clock = FakeClock()
+tele = Telemetry(trace=True, clock=clock)
+srv = WorkloadServer(qs, part, mesh=make_engine_mesh(3), telemetry=tele,
+                     answer_cache=False,
+                     pipeline=PipelineConfig(deadline_ms=1.0, max_batch=64,
+                                             clock=clock))
+tickets = []
+for name, pv in stream[:8]:
+    tickets.append(srv.submit(name, pv))
+    clock.t += 0.002
+    srv.pump()
+srv.drain()
+evs = tele.trace.to_chrome()["traceEvents"]
+begins = {e["id"] for e in evs if e["ph"] == "b"}
+ends = {e["id"] for e in evs if e["ph"] == "e"}
+assert begins == ends == {t.seq for t in tickets}, (begins, ends)
+gauges = tele.registry["cut_collectives"]
+for bi, b in enumerate(srv.buckets):
+    want_cuts = bucket_collectives(b.signature)
+    assert gauges.get(bucket=str(bi)) == float(want_cuts), bi
+    fn = srv._engine(b)
+    pd, params = assemble_batch(b, [(0, None)])
+    text = fn.lower(srv._state.tr, srv._state.va, srv._state.perms,
+                    pd, params).as_text()
+    assert count_hlo_collectives(text) == 2 * want_cuts, b.signature
+for t, (w, nw, ovw) in zip(tickets, want[:8]):
+    rows, cnt, ovf = t.result
+    assert cnt == nw and np.array_equal(rows, w), t.name
 print("PIPELINE_SHARD_MAP_OK")
 """
 

@@ -1,0 +1,304 @@
+"""Observability subsystem (ISSUE-8): trace, metrics, telemetry wiring.
+
+The invariants this file owns:
+  * the trace recorder exports well-formed Chrome trace-event JSON, and a
+    FakeClock-driven pipelined serve produces a matched async begin/end
+    ticket span pair per request plus flush/stage/dispatch/retire spans
+    on the bucket lanes;
+  * a migration emits an instant event and an epoch bump, and tickets
+    queued across the bump record the new epoch in their span args;
+  * the metrics registry enforces label cardinality, snapshot/delta
+    subtract counters and histograms (never gauges), and the Prometheus
+    text exposition round-trips through its parser;
+  * the drain-time self-check fires on a deliberately broken counter;
+  * tracing disabled records zero events and stays bit-identical to the
+    traced path;
+  * cut_collectives gauges equal WorkloadServer.collective_counts() and
+    record_engine_costs publishes per-bucket FLOPs/bytes.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.partitioner import wawpart_partition
+from repro.kg.workloads import lubm_queries
+from repro.obs import (MetricError, MetricsRegistry, Telemetry,
+                       TraceRecorder, parse_prometheus, snapshot_delta)
+from repro.launch.serve import (Counter, PipelineConfig, WorkloadServer,
+                                request_stream)
+
+
+@pytest.fixture(scope="module")
+def lubm_served(lubm_small):
+    qs = lubm_queries()
+    part = wawpart_partition(lubm_small, qs, n_shards=3)
+    return qs, part
+
+
+class FakeClock:
+    """Deterministic monotonic clock the tests advance by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _eq(a, b):
+    return (np.array_equal(a[0], b[0]) and a[1] == b[1]
+            and bool(a[2]) == bool(b[2]))
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+
+def test_recorder_chrome_export_shapes():
+    clock = FakeClock()
+    rec = TraceRecorder(clock)
+    rec.async_begin("ticket/q", 7, args={"epoch": 0})
+    clock.advance(0.001)
+    with rec.span("flush/drain", tid="bucket0", args={"n": 2}):
+        clock.advance(0.002)
+    rec.instant("migration", args={"epoch": 1})
+    clock.advance(0.001)
+    rec.async_end("ticket/q", 7)
+    ch = rec.to_chrome()
+    evs = ch["traceEvents"]
+    assert [e["ph"] for e in evs] == ["b", "X", "i", "e"]
+    # seconds became microseconds, shifted so the trace starts at 0
+    assert evs[0]["ts"] == 0.0
+    assert evs[1]["ts"] == pytest.approx(1000.0)
+    assert evs[1]["dur"] == pytest.approx(2000.0)
+    assert evs[-1]["ts"] == pytest.approx(4000.0)
+    # async pair matched by (cat, id); every event carries a pid
+    assert evs[0]["id"] == evs[-1]["id"] == 7
+    assert all(e["pid"] == 1 for e in evs)
+    assert ch["displayTimeUnit"] == "ms"
+    json.dumps(ch)   # must be JSON-serializable as-is
+
+
+def test_recorder_disabled_is_noop_and_bounded():
+    rec = TraceRecorder(FakeClock(), enabled=False)
+    rec.async_begin("t", 1)
+    rec.instant("x")
+    with rec.span("s"):
+        pass
+    assert len(rec) == 0 and rec.dropped == 0
+    # a full buffer drops instead of growing
+    full = TraceRecorder(FakeClock(), max_events=2)
+    for _ in range(5):
+        full.instant("x")
+    assert len(full) == 2 and full.dropped == 3
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_label_cardinality_enforced():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", "h", ("template",))
+    c.inc(template="q1")
+    with pytest.raises(MetricError):
+        c.inc()                                   # missing label
+    with pytest.raises(MetricError):
+        c.inc(template="q1", shard="0")           # undeclared label
+    with pytest.raises(MetricError):
+        c.inc(-1, template="q1")                  # counters only go up
+    with pytest.raises(MetricError):
+        reg.gauge("hits", "conflict")             # kind conflict
+    assert c.total() == 1
+
+
+def test_snapshot_delta_counters_histograms_not_gauges():
+    reg = MetricsRegistry()
+    reg.counter("served", labels=("t",))
+    reg.gauge("depth", labels=("b",))
+    reg.histogram("lat", labels=(), buckets=(1.0, 10.0))
+    reg["served"].inc(3, t="a")
+    reg["depth"].set(5, b="0")
+    reg["lat"].observe(0.5)
+    old = reg.snapshot()
+    reg["served"].inc(2, t="a")
+    reg["served"].inc(1, t="b")                   # new label set: from zero
+    reg["depth"].set(9, b="0")
+    reg["lat"].observe(20.0)
+    d = snapshot_delta(reg.snapshot(), old)
+    by_t = {s["labels"]["t"]: s["value"] for s in d["served"]["series"]}
+    assert by_t == {"a": 2, "b": 1}
+    assert d["depth"]["series"][0]["value"] == 9  # gauges pass through
+    (lat,) = d["lat"]["series"]
+    assert lat["count"] == 1 and lat["cumulative"] == [0, 0, 1]
+    # reset zeroes counters/histograms but keeps gauge state
+    reg.reset()
+    assert reg.total("served") == 0
+    assert reg["depth"].get(b="0") == 9
+
+
+def test_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("served", "requests answered", ("template",))
+    reg.histogram("lat_ms", "latency", (), buckets=(1.0, 5.0))
+    reg.gauge("epoch")
+    reg["served"].inc(4, template="q1")
+    reg["served"].inc(1, template='we"ird\nname')
+    reg["lat_ms"].observe(0.5)
+    reg["lat_ms"].observe(3.0)
+    reg["lat_ms"].observe(100.0)
+    reg["epoch"].set(2)
+    text = reg.to_prometheus()
+    assert "# TYPE served counter" in text
+    assert "# HELP served requests answered" in text
+    parsed = parse_prometheus(text)
+    assert ({"template": "q1"}, 4.0) in parsed["served"]
+    assert ({"template": 'we"ird\nname'}, 1.0) in parsed["served"]
+    buckets = {s[0]["le"]: s[1] for s in parsed["lat_ms_bucket"]}
+    assert buckets == {"1": 1.0, "5": 2.0, "+Inf": 3.0}
+    assert parsed["lat_ms_sum"] == [({}, 103.5)]
+    assert parsed["lat_ms_count"] == [({}, 3.0)]
+    assert parsed["epoch"] == [({}, 2.0)]
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def test_traced_pipeline_lifecycle_and_migration(lubm_served):
+    """One traced pipelined run: per-ticket async spans, bucket-lane
+    flush/stage/dispatch/retire spans, a migration instant event, and
+    post-migration tickets carrying the new epoch."""
+    from repro.adaptive.repartition import incremental_repartition
+    from repro.launch.serve import two_phase_weights
+
+    qs, part = lubm_served
+    clock = FakeClock()
+    tele = Telemetry(trace=True, clock=clock)
+    srv = WorkloadServer(qs, part, answer_cache=False, telemetry=tele,
+                         pipeline=PipelineConfig(deadline_ms=10.0,
+                                                 max_batch=64, clock=clock))
+    stream = request_stream(qs, 9)
+    tickets = [srv.submit(n, p, _pump=False) for n, p in stream]
+    clock.advance(0.011)
+    srv.pump()                                    # deadline flushes
+    srv.drain()
+
+    _wa, wb = two_phase_weights(qs)
+    res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+    late = srv.submit(qs[0].name, _pump=False)    # queued across the bump
+    srv.migrate(res.part)
+    srv.drain()
+    tickets.append(late)
+    assert late.epoch == 1
+
+    evs = tele.trace.to_chrome()["traceEvents"]
+    begins = {e["id"] for e in evs if e["ph"] == "b"}
+    ends = {e["id"] for e in evs if e["ph"] == "e"}
+    assert begins == ends == {t.seq for t in tickets}
+    lanes = {e["tid"] for e in evs if e["ph"] == "X"}
+    span_names = {e["name"] for e in evs if e["ph"] == "X"}
+    assert {"stage", "dispatch", "retire"} <= span_names
+    assert any(n.startswith("flush/") for n in span_names)
+    assert any(t.startswith("bucket") for t in lanes)
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert any(e["name"] == "migration" and e["args"]["epoch"] == 1
+               for e in instants)
+    # the late ticket's span records the post-migration epoch
+    (late_b,) = [e for e in evs
+                 if e["ph"] == "b" and e["id"] == late.seq]
+    assert late_b["args"]["epoch"] == 1
+    assert tele.total("epoch_bumps") == 1
+    assert srv.telemetry.registry["epoch"].get() == 1.0
+
+
+def test_labeled_counters_match_flat_stats(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=8))
+    stream = request_stream(qs, 20)
+    srv.serve(stream)
+    srv.serve(stream[:5])                         # answer-cache hits
+    st = srv.stats
+    tele = srv.telemetry
+    assert st[Counter.SERVED] == 25 and st["served"] == 25
+    assert st[Counter.CACHE_HITS] == 5
+    # label sums equal the flat view for every counter
+    for c in Counter:
+        assert tele.total(c.value) == st[c], c
+    # per-template served splits by the stream's round-robin mix
+    served = {s["labels"]["template"]: s["value"]
+              for s in tele.snapshot()["served"]["series"]}
+    assert sum(served.values()) == 25
+    assert set(served) <= {q.name for q in qs}
+    # the latency histogram saw every completed request
+    (lat,) = tele.snapshot()["request_latency_ms"]["series"]
+    assert lat["count"] == 25
+    # flush/fill observations exist per flushed bucket
+    fills = tele.snapshot()["batch_fill_ratio"]["series"]
+    assert fills and all(0 < s["sum"] <= s["count"] for s in fills)
+
+
+def test_cut_collective_gauges_match_signatures(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part)
+    gauges = srv.telemetry.registry["cut_collectives"]
+    got = [gauges.get(bucket=str(bi)) for bi in range(srv.n_buckets)]
+    assert got == [float(c) for c in srv.collective_counts()]
+
+
+def test_invariant_self_check_fires_on_broken_counter(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=64))
+    srv.serve(request_stream(qs, 4))              # healthy: drain passes
+    srv.telemetry.count("served", template=qs[0].name)   # break the books
+    with pytest.raises(RuntimeError, match="invariant"):
+        srv.drain()
+
+
+def test_tracing_disabled_zero_events_bit_identical(lubm_served):
+    qs, part = lubm_served
+    stream = request_stream(qs, 10)
+    traced = WorkloadServer(qs, part, answer_cache=False,
+                            telemetry=Telemetry(trace=True))
+    want = traced.serve(stream)
+    assert len(traced.telemetry.trace) > 0
+    plain = WorkloadServer(qs, part, answer_cache=False, cache=traced.cache)
+    got = plain.serve(stream)
+    assert len(plain.telemetry.trace) == 0
+    for a, b in zip(want, got):
+        assert _eq(a, b)
+
+
+def test_record_engine_costs_publishes_gauges(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part)
+    costs = srv.record_engine_costs()
+    assert len(costs["flops"]) == srv.n_buckets
+    reg = srv.telemetry.registry
+    for bi in range(srv.n_buckets):
+        assert reg["engine_flops"].get(bucket=str(bi)) == costs["flops"][bi]
+        assert reg["engine_bytes"].get(bucket=str(bi)) == costs["bytes"][bi]
+    assert all(f > 0 for f in costs["flops"])
+
+
+def test_reset_stats_clears_counters_trace_not_state_gauges(lubm_served):
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part, telemetry=Telemetry(trace=True))
+    srv.serve(request_stream(qs, 4))
+    assert srv.stats[Counter.SERVED] == 4 and len(srv.telemetry.trace) > 0
+    srv.reset_stats()
+    assert srv.stats[Counter.SERVED] == 0
+    assert len(srv.telemetry.trace) == 0
+    assert srv.latency_stats()["n"] == 0
+    # state gauges survive: they describe the epoch, not traffic
+    assert srv.telemetry.registry["cut_collectives"].get(bucket="0") \
+        is not None
+    srv.drain()                                   # invariants hold post-reset

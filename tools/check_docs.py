@@ -8,7 +8,11 @@ Checks, in order:
      pytest actually collects (``pytest --collect-only``) — a new test
      file must be documented, a deleted one must be dropped;
   3. every section and BENCH_*.json artifact printed by
-     ``benchmarks/run.py --list`` is mentioned in docs/benchmarks.md.
+     ``benchmarks/run.py --list`` is mentioned in docs/benchmarks.md;
+  4. the metric table in docs/observability.md matches the registry
+     declarations in ``repro.obs.SERVING_SCHEMA`` — name, kind, and
+     label set (the obs package is stdlib-only at import time, so this
+     works without jax installed).
 
 Run from the repo root: ``PYTHONPATH=src python tools/check_docs.py``
 (``--no-collect`` skips the pytest step for fast local iteration).
@@ -22,7 +26,8 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOC_FILES = ["README.md", "docs/architecture.md", "docs/benchmarks.md"]
+DOC_FILES = ["README.md", "docs/architecture.md", "docs/benchmarks.md",
+             "docs/observability.md"]
 
 # [text](target) — excluding images; good enough for our hand-written docs
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
@@ -112,6 +117,42 @@ def check_bench_listing() -> list[str]:
             "is undocumented" for name in sorted(names) if name not in doc]
 
 
+# | `name` | kind | `label`, `label` | meaning |
+METRIC_ROW_RE = re.compile(
+    r"^\|\s*`(\w+)`\s*\|\s*(counter|gauge|histogram)\s*\|([^|]*)\|",
+    re.MULTILINE)
+
+
+def check_metric_schema() -> list[str]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    try:
+        from repro.obs import SERVING_SCHEMA
+    except ImportError as exc:
+        return [f"cannot import repro.obs.SERVING_SCHEMA: {exc}"]
+    declared = {name: (kind, frozenset(labels))
+                for name, kind, labels, *_ in SERVING_SCHEMA}
+    with open(os.path.join(REPO, "docs/observability.md")) as f:
+        text = f.read()
+    documented = {m.group(1): (m.group(2),
+                               frozenset(re.findall(r"`(\w+)`", m.group(3))))
+                  for m in METRIC_ROW_RE.finditer(text)}
+    if not documented:
+        return ["docs/observability.md: metric schema table is empty"]
+    errors = []
+    for name in sorted(set(declared) - set(documented)):
+        errors.append(f"docs/observability.md: declared metric {name!r} "
+                      "missing from the metric schema table")
+    for name in sorted(set(documented) - set(declared)):
+        errors.append(f"docs/observability.md: documents metric {name!r}, "
+                      "which SERVING_SCHEMA does not declare")
+    for name in sorted(set(declared) & set(documented)):
+        if declared[name] != documented[name]:
+            errors.append(
+                f"docs/observability.md: metric {name!r} documented as "
+                f"{documented[name]}, declared as {declared[name]}")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--no-collect", action="store_true",
@@ -122,10 +163,12 @@ def main() -> int:
     errors = check_links()
     errors += check_test_inventory(collect=not args.no_collect)
     errors += check_bench_listing()
+    errors += check_metric_schema()
     for e in errors:
         print(f"DOCS ERROR: {e}", file=sys.stderr)
     if not errors:
-        print("docs check: links, test inventory, and bench listing OK")
+        print("docs check: links, test inventory, bench listing, and "
+              "metric schema OK")
     return 1 if errors else 0
 
 

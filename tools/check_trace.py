@@ -1,0 +1,115 @@
+"""Telemetry-artifact gate (CI bench-smoke job): exported traces and
+metrics snapshots must be well-formed, not just non-empty files.
+
+Checks:
+  1. the Chrome trace is valid JSON whose ``traceEvents`` contain at
+     least one *matched* async begin/end ticket span pair (``ph`` "b"/"e"
+     sharing an id on a ``ticket/...`` name) — the request-lifecycle
+     signal Perfetto renders;
+  2. with ``--require-instant NAME``, an instant event (``ph`` "i") of
+     that name exists (e.g. ``migration`` for an adaptive run);
+  3. the metrics snapshot (optional second argument) declares the
+     ``cut_collectives`` gauge with at least one per-bucket series and
+     its counter totals satisfy the documented invariant
+     ``served == cache_hits + executed + deduped``.
+
+Run: ``python tools/check_trace.py TRACE.json [METRICS.json]
+[--require-instant migration]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_trace(path: str, require_instant: list[str]) -> list[str]:
+    """Validate one Chrome trace-event file; returns error strings."""
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{path}: not readable JSON ({exc})"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents"]
+    begins = {e.get("id") for e in events
+              if e.get("ph") == "b"
+              and str(e.get("name", "")).startswith("ticket/")}
+    ends = {e.get("id") for e in events
+            if e.get("ph") == "e"
+            and str(e.get("name", "")).startswith("ticket/")}
+    matched = begins & ends
+    if not matched:
+        errors.append(f"{path}: no matched begin/end ticket span pair "
+                      f"({len(begins)} begins, {len(ends)} ends)")
+    if begins != ends:
+        errors.append(f"{path}: unmatched ticket spans "
+                      f"(begin-only {sorted(begins - ends)[:5]}, "
+                      f"end-only {sorted(ends - begins)[:5]})")
+    instants = {e.get("name") for e in events if e.get("ph") == "i"}
+    for name in require_instant:
+        if name not in instants:
+            errors.append(f"{path}: required instant event {name!r} "
+                          f"missing (saw {sorted(instants)})")
+    if not errors:
+        print(f"{path}: {len(events)} events, {len(matched)} complete "
+              f"ticket spans, instants {sorted(instants)}")
+    return errors
+
+
+def _counter_total(snapshot: dict, name: str) -> float:
+    fam = snapshot.get(name) or {}
+    return sum(s.get("value", 0) for s in fam.get("series", []))
+
+
+def check_metrics(path: str) -> list[str]:
+    """Validate one metrics-snapshot JSON file; returns error strings."""
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{path}: not readable JSON ({exc})"]
+    errors: list[str] = []
+    cuts = snap.get("cut_collectives")
+    if not cuts or cuts.get("kind") != "gauge" or not cuts.get("series"):
+        errors.append(f"{path}: cut_collectives gauge missing or empty")
+    served = _counter_total(snap, "served")
+    split = (_counter_total(snap, "cache_hits")
+             + _counter_total(snap, "executed")
+             + _counter_total(snap, "deduped"))
+    if served != split:
+        errors.append(f"{path}: counter invariant broken: served={served} "
+                      f"!= cache_hits+executed+deduped={split}")
+    if served <= 0:
+        errors.append(f"{path}: no served requests recorded")
+    if not errors:
+        cut_series = {s["labels"].get("bucket"): s["value"]
+                      for s in cuts["series"]}
+        print(f"{path}: served={served:g}, per-bucket cut collectives "
+              f"{cut_series}")
+    return errors
+
+
+def main() -> int:
+    """CLI entry point; exit 1 on any validation error."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON (--trace-out)")
+    ap.add_argument("metrics", nargs="?", default=None,
+                    help="metrics snapshot JSON (--metrics-out)")
+    ap.add_argument("--require-instant", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless an instant event NAME is present "
+                         "(repeatable)")
+    args = ap.parse_args()
+    errors = check_trace(args.trace, args.require_instant)
+    if args.metrics:
+        errors += check_metrics(args.metrics)
+    for e in errors:
+        print(f"TRACE ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
