@@ -1,6 +1,8 @@
 """Paper Fig. 7/8: workload-average runtimes per placement method."""
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 
@@ -12,21 +14,28 @@ def summarize(per_query: dict) -> dict:
                                    for r in per_query.values()))}
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     from benchmarks import bench_bsbm, bench_lubm
     out = {}
-    lub = bench_lubm.run()
-    bsb = bench_bsbm.run()
+    lub = bench_lubm.run(scale=0.1, iters=1) if smoke else bench_lubm.run()
+    bsb = bench_bsbm.run(n_products=60, iters=1) if smoke \
+        else bench_bsbm.run()
     for label in ("wawpart", "random", "centralized"):
         out[f"lubm/{label}"] = summarize(lub[label])
         out[f"bsbm/{label}"] = summarize(bsb[label])
     return out
 
 
-def main() -> None:
-    for name, r in run().items():
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args(argv)
+    res = run(smoke=args.smoke)
+    for name, r in res.items():
         print(f"averages/{name},{r['ms'] * 1e3:.1f},"
               f"n_gathers={r['n_gathers']}")
+    return res
 
 
 if __name__ == "__main__":

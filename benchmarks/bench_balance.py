@@ -1,16 +1,19 @@
 """Paper §4.1 shard-balance table: WawPart within -8%..+15% of mean."""
 from __future__ import annotations
 
+import argparse
 
-def run() -> dict:
+
+def run(lubm_scale: float = 0.5, bsbm_products: int = 300) -> dict:
     from repro.core.partitioner import random_partition, wawpart_partition
     from repro.kg.generator import generate_bsbm, generate_lubm
     from repro.kg.workloads import bsbm_queries, lubm_queries
 
-    out = {}
+    out: dict = {"_meta": {"lubm_scale": lubm_scale,
+                           "bsbm_products": bsbm_products}}
     for name, store, qs in [
-        ("lubm", generate_lubm(1, scale=0.5, seed=0), lubm_queries()),
-        ("bsbm", generate_bsbm(300, seed=0), bsbm_queries()),
+        ("lubm", generate_lubm(1, scale=lubm_scale, seed=0), lubm_queries()),
+        ("bsbm", generate_bsbm(bsbm_products, seed=0), bsbm_queries()),
     ]:
         ww = wawpart_partition(store, qs, n_shards=3)
         rnd = random_partition(store, qs, n_shards=3, seed=0)
@@ -20,12 +23,20 @@ def run() -> dict:
     return out
 
 
-def main() -> None:
-    for name, r in run().items():
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args(argv)
+    res = run(lubm_scale=0.1, bsbm_products=60) if args.smoke else run()
+    for name, r in res.items():
+        if name == "_meta":
+            continue
         for method in ("wawpart", "random"):
             dev = r[method]["rel_dev"]
             print(f"balance/{name}/{method},0,"
                   f"sizes={r[method]['sizes']};dev={dev}")
+    return res
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Paper Fig. 6: per-query BSBM runtimes — WawPart vs Random vs Centralized."""
 from __future__ import annotations
 
+import argparse
+
 
 def run(n_products: int = 250, iters: int = 2) -> dict:
     from repro.core.partitioner import (centralized_partition,
@@ -22,12 +24,17 @@ def run(n_products: int = 250, iters: int = 2) -> dict:
     return out
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args(argv)
+    res = run(n_products=60, iters=1) if args.smoke else run()
     from benchmarks.harness import emit_csv
-    res = run()
     for label in ("wawpart", "random", "centralized"):
         emit_csv(f"bsbm/{label}", res[label],
                  extra_cols=("n_gathers", "n_solutions"))
+    return res
 
 
 if __name__ == "__main__":

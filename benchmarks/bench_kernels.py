@@ -159,7 +159,7 @@ def run(scale: float = 0.1, iters: int = 5, n_requests: int = 64,
     return out
 
 
-def main(argv: list[str] | None = None) -> None:
+def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI configuration: small scale, 1 iteration")
@@ -178,6 +178,7 @@ def main(argv: list[str] | None = None) -> None:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2, sort_keys=True)
         print(f"kernels/json,0,wrote_{args.json}", file=sys.stderr)
+    return res
 
 
 if __name__ == "__main__":

@@ -2,6 +2,8 @@
 Local Centralized (wall-clock of the jitted engine on this host)."""
 from __future__ import annotations
 
+import argparse
+
 
 def run(scale: float = 0.35, iters: int = 2) -> dict:
     from repro.core.partitioner import (centralized_partition,
@@ -23,12 +25,17 @@ def run(scale: float = 0.35, iters: int = 2) -> dict:
     return out
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args(argv)
+    res = run(scale=0.1, iters=1) if args.smoke else run()
     from benchmarks.harness import emit_csv
-    res = run()
     for label in ("wawpart", "random", "centralized"):
         emit_csv(f"lubm/{label}", res[label],
                  extra_cols=("n_gathers", "n_solutions"))
+    return res
 
 
 if __name__ == "__main__":

@@ -386,7 +386,7 @@ def run_latency(scale: float = 0.1, n_requests: int = 96,
     return out
 
 
-def main(argv: list[str] | None = None) -> None:
+def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI configuration: one method, 16 requests, "
@@ -417,6 +417,7 @@ def main(argv: list[str] | None = None) -> None:
                   methods=("wawpart",), sharded=sharded)
     else:
         res = run(sharded=sharded)
+    sections = {"serve": res}
 
     if args.json:
         import json
@@ -431,6 +432,7 @@ def main(argv: list[str] | None = None) -> None:
                              batch=16, sharded=sharded)
         else:
             cres = run_cache(sharded=sharded)
+        sections["cache"] = cres
         with open(args.json_cache, "w") as f:
             json.dump(cres, f, indent=2, sort_keys=True)
         print(f"serve/json,0,wrote_{args.json_cache}", file=sys.stderr)
@@ -453,6 +455,7 @@ def main(argv: list[str] | None = None) -> None:
                                deadlines_ms=(None, 10.0, 25.0))
         else:
             lres = run_latency()
+        sections["latency"] = lres
         with open(args.json_latency, "w") as f:
             json.dump(lres, f, indent=2, sort_keys=True)
         print(f"serve/json,0,wrote_{args.json_latency}", file=sys.stderr)
@@ -465,18 +468,19 @@ def main(argv: list[str] | None = None) -> None:
                   f"{r['flush_full']}|{r['flush_deadline']}|"
                   f"{r['flush_drain']}")
 
-    res.pop("_meta")
-    for method, rows in res.items():
+    methods = {m: rows for m, rows in res.items() if m != "_meta"}
+    for method, rows in methods.items():
         for label, r in rows.items():
             derived = f"qps={r['qps']:.0f};compiles={r['compiles']}"
             if "collectives" in r:
                 derived += ";collectives=" + "|".join(
                     str(c) for c in r["collectives"])
             print(f"serve/{method}/{label},{r['us_per_req']:.1f},{derived}")
-    first = next(iter(res.values()))
+    first = next(iter(methods.values()))
     ratio = first["batch64"]["qps"] / first["batch1_perquery"]["qps"]
-    print(f"serve/{next(iter(res))}/batch64_vs_batch1,{ratio:.2f},"
+    print(f"serve/{next(iter(methods))}/batch64_vs_batch1,{ratio:.2f},"
           f"x_speedup_over_per_query_serving")
+    return sections
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Shared benchmark harness: wall-time measurement of jitted query plans."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -51,3 +52,20 @@ def emit_csv(name: str, rows: dict, extra_cols=()) -> None:
     for qname, r in rows.items():
         derived = ";".join(f"{k}={r[k]}" for k in extra_cols if k in r)
         print(f"{name}/{qname},{r['ms'] * 1e3:.1f},{derived}")
+
+
+def emit_history(section: str, result: dict, out_dir: str = ".",
+                 run=None) -> str:
+    """Append one section's result dict to the normalized bench history.
+
+    Flattens `result` into schema-versioned records (benchmarks/history)
+    under the shared run identity (`run` or a fresh `RunContext`, which
+    honors the BENCH_RUN_ID env var so every section of one
+    benchmarks/run.py invocation lands under one run_id) and appends them
+    to ``<out_dir>/BENCH_history.jsonl``. Returns the history path.
+    """
+    from benchmarks import history as H
+    run = run or H.RunContext.create()
+    path = os.path.join(out_dir, H.HISTORY_NAME)
+    H.append_history(path, H.normalize(section, result, run))
+    return path

@@ -1,0 +1,410 @@
+"""Normalized bench-record history: the cross-PR perf trajectory on disk.
+
+Every bench section's result dict is flattened into versioned records
+(`SCHEMA_VERSION`) appended to ``BENCH_history.jsonl`` — one *meta* line
+per (run, section) capturing the configuration, and one *metric* line
+per numeric leaf:
+
+    {"schema": 1, "kind": "metric", "run_id": ..., "sha": ..., "ts": ...,
+     "backend": ..., "devices": ..., "section": ..., "metric":
+     "wawpart.batch64.qps", "value": 123.4, "unit": "qps", "notes": {...}}
+
+`metric` is the dotted path of the leaf inside the section's result
+dict (list indices become path components). A row's PR-7 telemetry
+``metrics`` sub-dict rides along as `notes` on that row's records
+instead of being flattened — one source of truth per observation.
+
+One run context (`RunContext.create`) is shared by every section of a
+``benchmarks/run.py`` invocation, so history groups records by `run_id`;
+standalone section runs honor the ``BENCH_RUN_ID`` environment variable
+for the same effect. Records are stdlib-only and append-only: the
+regression gate (`tools/check_bench.py`) and the trajectory report
+(`benchmarks/report.py`) both read them through `load_history` /
+`gate_history` here, so the two can never disagree about what a
+regression is.
+"""
+from __future__ import annotations
+
+import fnmatch
+import json
+import math
+import os
+import statistics
+import subprocess
+import uuid
+from dataclasses import dataclass, field
+
+SCHEMA_VERSION = 1
+HISTORY_NAME = "BENCH_history.jsonl"
+
+#: required fields per record kind (meta lines carry the config dict,
+#: metric lines one numeric observation)
+_COMMON_FIELDS = ("schema", "kind", "run_id", "sha", "ts", "backend",
+                  "devices", "section")
+_METRIC_FIELDS = _COMMON_FIELDS + ("metric", "value", "unit")
+
+#: final path components whose series are gated higher-is-better /
+#: lower-is-better; everything else is informational (tracked, plotted,
+#: never gated) — an explicit policy, not a guess
+HIGHER_BETTER = frozenset({
+    "qps", "mrows_per_s", "hit_rate", "cold_hit_rate", "cache_speedup"})
+#: compile_ms is deliberately absent: first-compile wall time on shared
+#: CI runners flaps across cache states, so it is tracked but not gated
+LOWER_BETTER = frozenset({
+    "us_per_req", "us_per_call", "ms", "elapsed_s", "traffic",
+    "distributed", "weighted_distributed"})
+
+
+@dataclass(frozen=True)
+class RunContext:
+    """Identity shared by every record one bench invocation emits."""
+
+    run_id: str
+    sha: str
+    ts: str                       # UTC ISO-8601
+    backend: str                  # jax default backend ("cpu", "tpu", ...)
+    devices: int
+
+    @classmethod
+    def create(cls, run_id: str | None = None) -> "RunContext":
+        """Build the run identity: explicit `run_id` wins, then the
+        ``BENCH_RUN_ID`` environment variable (how ``benchmarks/run.py``
+        shares one id across sections), then a fresh uuid."""
+        import datetime
+        rid = run_id or os.environ.get("BENCH_RUN_ID") \
+            or uuid.uuid4().hex[:12]
+        ts = datetime.datetime.now(datetime.timezone.utc) \
+            .strftime("%Y-%m-%dT%H:%M:%SZ")
+        return cls(run_id=rid, sha=git_sha(), ts=ts,
+                   backend=_jax_backend(), devices=_jax_device_count())
+
+
+def git_sha() -> str:
+    """The repo HEAD sha, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def _jax_backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "none"
+
+
+def _jax_device_count() -> int:
+    try:
+        import jax
+        return len(jax.devices())
+    except Exception:
+        return 0
+
+
+def unit_for(metric: str) -> str:
+    """Infer a record's unit from its metric path (explicit suffix map)."""
+    last = _last_name(metric)
+    if last.endswith("_ms") or last == "ms":
+        return "ms"
+    if last.startswith("us_per_"):
+        return "us"
+    if last.endswith("_s") and last != "mrows_per_s":
+        return "s"
+    if last == "qps":
+        return "qps"
+    if last == "mrows_per_s":
+        return "mrows/s"
+    if last.endswith(("rate", "ratio", "speedup", "frac", "fraction")):
+        return "ratio"
+    return "count"
+
+
+def _last_name(metric: str) -> str:
+    """Last non-index component of a dotted metric path (list indices are
+    numeric components: ``collectives.2`` has the semantics of
+    ``collectives``)."""
+    for part in reversed(metric.split(".")):
+        if not part.isdigit():
+            return part
+    return metric
+
+
+def direction(metric: str) -> int:
+    """+1 when higher is better, -1 when lower is better, 0 ungated."""
+    last = _last_name(metric)
+    if last in HIGHER_BETTER:
+        return 1
+    if last in LOWER_BETTER \
+            or (last.endswith("_ms") and last != "compile_ms"):
+        return -1
+    return 0
+
+
+def _flatten(prefix: str, value, notes, out: list) -> None:
+    if isinstance(value, bool):
+        return                           # flags are not perf series
+    if isinstance(value, (int, float)):
+        if isinstance(value, float) and not math.isfinite(value):
+            return
+        out.append((prefix, float(value), notes))
+        return
+    if isinstance(value, dict):
+        row_notes = value.get("metrics") \
+            if isinstance(value.get("metrics"), dict) else None
+        for k, v in value.items():
+            if k in ("_meta", "metrics"):
+                continue                 # meta -> its own record; metrics
+            #                              ride as notes, not as leaves
+            key = f"{prefix}.{k}" if prefix else str(k)
+            _flatten(key, v, row_notes if row_notes is not None else notes,
+                     out)
+        return
+    if isinstance(value, (list, tuple)):
+        for i, v in enumerate(value):
+            _flatten(f"{prefix}.{i}" if prefix else str(i), v, notes, out)
+
+
+def normalize(section: str, result: dict, run: RunContext) -> list[dict]:
+    """Flatten one section's result dict into schema-v1 records.
+
+    Emits one meta record (the section's ``_meta`` dict, possibly empty)
+    followed by one metric record per finite numeric leaf; booleans,
+    strings, non-finite floats, and the ``metrics`` telemetry notes are
+    never their own series (the notes attach to their row's records).
+    """
+    common = {"schema": SCHEMA_VERSION, "run_id": run.run_id,
+              "sha": run.sha, "ts": run.ts, "backend": run.backend,
+              "devices": run.devices, "section": section}
+    records = [{**common, "kind": "meta",
+                "meta": result.get("_meta") or {}}]
+    leaves: list = []
+    _flatten("", result, None, leaves)
+    for metric, value, notes in leaves:
+        rec = {**common, "kind": "metric", "metric": metric,
+               "value": value, "unit": unit_for(metric)}
+        if notes is not None:
+            rec["notes"] = notes
+        records.append(rec)
+    return records
+
+
+def validate_record(rec: dict) -> list[str]:
+    """Schema check for one history line; returns error strings."""
+    errors = []
+    if not isinstance(rec, dict):
+        return [f"record is not an object: {rec!r}"]
+    if rec.get("schema") != SCHEMA_VERSION:
+        errors.append(f"schema {rec.get('schema')!r} != {SCHEMA_VERSION}")
+    kind = rec.get("kind")
+    if kind not in ("meta", "metric"):
+        errors.append(f"unknown kind {kind!r}")
+    required = _METRIC_FIELDS if kind == "metric" else _COMMON_FIELDS
+    for f_ in required:
+        if f_ not in rec:
+            errors.append(f"missing field {f_!r}")
+    if kind == "metric" and "value" in rec \
+            and not isinstance(rec["value"], (int, float)):
+        errors.append(f"non-numeric value {rec['value']!r}")
+    if kind == "meta" and not isinstance(rec.get("meta", {}), dict):
+        errors.append("meta record without a meta dict")
+    return errors
+
+
+def append_history(path: str, records: list[dict]) -> None:
+    """Append validated records to the jsonl history (one line each)."""
+    for rec in records:
+        errs = validate_record(rec)
+        if errs:
+            raise ValueError(f"invalid bench record {rec!r}: {errs}")
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "a") as f:
+        for rec in records:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+
+def load_history(path: str) -> list[dict]:
+    """Read and schema-validate every record in a history file."""
+    records = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError as exc:
+                raise ValueError(f"{path}:{ln}: unparseable: {exc}")
+            errs = validate_record(rec)
+            if errs:
+                raise ValueError(f"{path}:{ln}: {errs}")
+            records.append(rec)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# regression analysis (shared by tools/check_bench.py and report.py)
+# ---------------------------------------------------------------------------
+
+def series_key(rec: dict) -> tuple:
+    """The identity a metric's trajectory is tracked under."""
+    return (rec["section"], rec["metric"], rec["backend"],
+            str(rec["devices"]))
+
+
+def key_str(key: tuple) -> str:
+    """Stable string form of a series key (baseline-file dict key)."""
+    return "|".join(str(k) for k in key)
+
+
+def run_order(records: list[dict]) -> list[str]:
+    """Run ids in first-appearance (append) order."""
+    order: list[str] = []
+    for rec in records:
+        if rec["run_id"] not in order:
+            order.append(rec["run_id"])
+    return order
+
+
+def series_by_key(records: list[dict]) -> dict[tuple, dict[str, float]]:
+    """{series key: {run_id: value}} over the metric records (a run's
+    last write wins, mirroring re-runs overriding within one run)."""
+    out: dict[tuple, dict[str, float]] = {}
+    for rec in records:
+        if rec["kind"] != "metric":
+            continue
+        out.setdefault(series_key(rec), {})[rec["run_id"]] = rec["value"]
+    return out
+
+
+@dataclass
+class GateRow:
+    """One series' verdict against its baseline."""
+
+    key: tuple
+    direction: int
+    value: float
+    baseline: float | None
+    band: float | None
+    n_prior: int
+    status: str          # ok|regressed|improved|new|provisional|informational
+    source: str = "history"       # "history" | "blessed"
+
+
+@dataclass
+class GateReport:
+    """Every gated series' verdict for the candidate run."""
+
+    candidate_run: str | None
+    rows: list[GateRow] = field(default_factory=list)
+
+    @property
+    def regressions(self) -> list[GateRow]:
+        return [r for r in self.rows if r.status == "regressed"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+
+def noise_band(prior: list[float], *, mad_scale: float,
+               floor_frac: float, baseline: float) -> float:
+    """Allowed deviation: max of the MAD-scaled noise estimate over the
+    baseline window and a relative floor (MAD of a quiet window is 0, so
+    the floor is what absorbs run-to-run jitter on fresh histories)."""
+    mad = statistics.median(abs(v - baseline) for v in prior) if prior \
+        else 0.0
+    # 1.4826 * MAD estimates sigma for normal noise; mad_scale sigmas
+    return max(mad_scale * 1.4826 * mad, floor_frac * abs(baseline))
+
+
+def gate_history(records: list[dict], *, window: int = 5,
+                 mad_scale: float = 4.0, floor_frac: float = 0.25,
+                 min_prior: int = 2,
+                 allow_regress: tuple[str, ...] = (),
+                 blessed: dict[str, float] | None = None) -> GateReport:
+    """Judge the newest run in `records` against its per-series baseline.
+
+    Baseline per (section, metric, backend, devices) series: the median
+    of the last `window` prior runs' values; the allowed band is
+    `noise_band` around it. A series with fewer than `min_prior` prior
+    runs has no noise estimate (the MAD of a single point is zero), so
+    it is reported "provisional" — tracked, never failed — until the
+    window is deep enough. Only direction-known metrics can regress
+    (see `direction`); `allow_regress` fnmatch patterns (matched against
+    ``section/metric`` and bare metric) downgrade a regression to "ok",
+    and a `blessed` value (from ``--update-baseline``) replaces the
+    history median for its series — how an intentional regression is
+    accepted without rewriting history (a blessed series gates even
+    below `min_prior`: the blessing is an explicit baseline).
+    """
+    order = run_order(records)
+    report = GateReport(candidate_run=order[-1] if order else None)
+    if not order:
+        return report
+    candidate = order[-1]
+    blessed = blessed or {}
+    for key, by_run in sorted(series_by_key(records).items()):
+        if candidate not in by_run:
+            continue
+        value = by_run[candidate]
+        prior = [by_run[r] for r in order[:-1] if r in by_run][-window:]
+        d = direction(key[1])
+        if d == 0:
+            report.rows.append(GateRow(key, 0, value, None, None,
+                                       len(prior), "informational"))
+            continue
+        source = "history"
+        if key_str(key) in blessed:
+            baseline = blessed[key_str(key)]
+            source = "blessed"
+        elif not prior:
+            report.rows.append(GateRow(key, d, value, None, None, 0,
+                                       "new"))
+            continue
+        elif len(prior) < min_prior:
+            report.rows.append(GateRow(key, d, value,
+                                       statistics.median(prior), None,
+                                       len(prior), "provisional"))
+            continue
+        else:
+            baseline = statistics.median(prior)
+        band = noise_band(prior, mad_scale=mad_scale,
+                          floor_frac=floor_frac, baseline=baseline)
+        delta = (value - baseline) * d      # negative = got worse
+        if delta < -band:
+            status = "regressed"
+            name = f"{key[0]}/{key[1]}"
+            if any(fnmatch.fnmatch(name, p) or fnmatch.fnmatch(key[1], p)
+                   for p in allow_regress):
+                status = "ok"
+        elif delta > band:
+            status = "improved"
+        else:
+            status = "ok"
+        report.rows.append(GateRow(key, d, value, baseline, band,
+                                   len(prior), status, source))
+    return report
+
+
+SPARK_CHARS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: list[float]) -> str:
+    """Unicode mini-plot of a series (min..max scaled per series)."""
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    if hi - lo <= 0:
+        return SPARK_CHARS[0] * len(values)
+    return "".join(
+        SPARK_CHARS[min(len(SPARK_CHARS) - 1,
+                        int((v - lo) / (hi - lo) * len(SPARK_CHARS)))]
+        for v in values)

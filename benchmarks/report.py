@@ -1,9 +1,11 @@
-"""Render EXPERIMENTS.md tables from results/*.jsonl (roofline + engine)."""
+"""Render EXPERIMENTS.md tables from results/*.jsonl (roofline + engine)
+and the perf trajectory from BENCH_history.jsonl (sparklines + gate)."""
 from __future__ import annotations
 
 import json
 import os
 
+from benchmarks import history
 from benchmarks.roofline import load_rows, roofline_row, wire_bytes
 
 
@@ -77,6 +79,54 @@ def perf_before_after() -> str:
     return "\n".join(out)
 
 
+def history_markdown(path: str = "BENCH_history.jsonl", *,
+                     max_runs: int = 16) -> str:
+    """Perf-trajectory table from the normalized bench history.
+
+    One row per (section, metric, backend, devices) series: a sparkline
+    over the last `max_runs` runs (oldest left), the latest value, and
+    the latest run's gate verdict — regressed rows are flagged with
+    **REGRESSED** so they jump out of EXPERIMENTS.md. Directionless
+    (informational) series render without a verdict.
+    """
+    if not os.path.exists(path):
+        return "(no bench history recorded yet)"
+    records = history.load_history(path)
+    metrics = [r for r in records if r.get("kind") == "metric"]
+    if not metrics:
+        return "(bench history holds no metric records)"
+    runs = history.run_order(metrics)[-max_runs:]
+    series = history.series_by_key(metrics)
+    report = history.gate_history(records)
+    verdicts = {r.key: r for r in report.rows}
+    out = [f"trajectory over runs: {' '.join(runs)}", "",
+           "| section | metric | backend x devices | trend | latest | "
+           "unit | gate |", "|---|---|---|---|---|---|---|"]
+    units = {history.series_key(r): r.get("unit", "") for r in metrics}
+    for key in sorted(series):
+        section, metric, backend, devices = key
+        vals = [series[key][rid] for rid in runs if rid in series[key]]
+        if not vals:
+            continue
+        latest = vals[-1]
+        row = verdicts.get(key)
+        if row is None or row.direction == 0:
+            verdict = "—"
+        elif row.status == "regressed":
+            verdict = "**REGRESSED**"
+        else:
+            verdict = row.status
+        out.append(f"| {section} | {metric} | {backend} x{devices} "
+                   f"| `{history.sparkline(vals)}` | {latest:g} "
+                   f"| {units.get(key, '')} | {verdict} |")
+    if report.regressions:
+        names = ", ".join(f"{r.key[0]}/{r.key[1]}"
+                          for r in report.regressions)
+        out += ["", f"**{len(report.regressions)} regression(s) in the "
+                    f"latest run:** {names}"]
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     print("## Roofline\n")
     print(roofline_markdown())
@@ -84,3 +134,5 @@ if __name__ == "__main__":
     print(engine_markdown())
     print("\n## Before/after\n")
     print(perf_before_after())
+    print("\n## Perf trajectory\n")
+    print(history_markdown())

@@ -19,6 +19,7 @@ Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 from __future__ import annotations
 
+import argparse
 import json
 
 PEAK_FLOPS = 197e12
@@ -85,8 +86,29 @@ def load_rows(path: str = "results/dryrun.jsonl") -> list[dict]:
     return rows
 
 
-def main() -> None:
-    rows = load_rows()
+def run(path: str = "results/dryrun.jsonl") -> dict:
+    """The roofline rows as one result dict keyed by (arch/shape/mesh),
+    normalizable into the bench history like every other section."""
+    out: dict = {"_meta": {"source": path, "peak_flops": PEAK_FLOPS,
+                           "hbm_bw": HBM_BW, "link_bw": LINK_BW}}
+    for r in load_rows(path):
+        out[f"{r['arch']}/{r['shape']}/{r['mesh']}"] = r
+    return out
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("input", nargs="?", default="results/dryrun.jsonl",
+                    help="dry-run artifact stream to derive rooflines from")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the derived rows as JSON "
+                         "(BENCH_roofline.json in CI artifacts)")
+    args = ap.parse_args(argv)
+    res = run(args.input)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+    rows = [r for k, r in res.items() if k != "_meta"]
     for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
                                          str(r["mesh"]))):
         if "error" in r:
@@ -99,6 +121,7 @@ def main() -> None:
               f"n={r['collective_s']:.3e};dom={r['dominant']};"
               f"frac={r['roofline_fraction']:.2f};"
               f"useful={r['useful_ratio']:.2f};peakGB={r['peak_gb']:.1f}")
+    return res
 
 
 if __name__ == "__main__":

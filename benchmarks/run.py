@@ -11,11 +11,16 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   §Kern  jnp vs Pallas kg_scan/kg_join query kernels (beyond-paper)
   §Roofline (if results/dryrun.jsonl exists)
 
-The serving, adaptive, and kernel sections also write machine-readable
-``BENCH_*.json`` artifacts next to the CSV stream, so the perf trajectory
-is tracked (and diffable) across PRs. ``--list`` prints every section and
-artifact (docs/benchmarks.md documents each artifact's schema and must
-stay in sync — CI's docs job diffs it against this listing).
+The serving, adaptive, kernel, and roofline sections also write
+machine-readable ``BENCH_*.json`` artifacts, and *every* section's result
+dict is normalized into versioned records appended to
+``BENCH_history.jsonl`` (see benchmarks/history.py) under one shared
+run_id — the cross-PR perf trajectory ``tools/check_bench.py`` gates and
+``benchmarks/report.py`` renders. ``--out-dir`` collects every artifact
+(and the history) in one directory; ``--smoke`` runs every section on its
+tiny CI configuration. ``--list`` prints every section and artifact
+(docs/benchmarks.md documents each artifact's schema and must stay in
+sync — CI's docs job diffs it against this listing).
 
 ``--dry-run`` imports every bench section and checks its entry point without
 executing any measurement — a fast CI rot-guard for the harness itself.
@@ -28,7 +33,7 @@ import sys
 
 SECTIONS = ("bench_joins", "bench_balance", "bench_lubm", "bench_bsbm",
             "bench_averages", "bench_serve_throughput", "bench_adaptive",
-            "bench_kernels")
+            "bench_kernels", "roofline")
 
 # artifact -> (producer module, producing flag, one-line summary); --list
 # prints this table and docs/benchmarks.md documents each row's schema
@@ -48,11 +53,18 @@ ARTIFACTS = {
     "BENCH_kernels.json": (
         "bench_kernels", "--json",
         "jnp vs Pallas kg_scan/kg_join kernel micro + end-to-end serve"),
+    "BENCH_roofline.json": (
+        "roofline", "--json",
+        "compute/memory/collective roofline terms from the dry-run"),
+    "BENCH_history.jsonl": (
+        "run", "--out-dir",
+        "normalized per-metric records from every section, appended per "
+        "run (the gated perf trajectory — see tools/check_bench.py)"),
 }
 
 
 def list_sections() -> None:
-    """Print every bench section and BENCH_*.json artifact (no jax import)."""
+    """Print every bench section and BENCH_* artifact (no jax import)."""
     print("sections:")
     for name in SECTIONS:
         print(f"  {name}")
@@ -64,9 +76,9 @@ def list_sections() -> None:
 def dry_run() -> None:
     """Import each bench module and verify its entry point is callable."""
     import importlib
-    for name in SECTIONS + ("roofline", "harness", "report"):
+    for name in SECTIONS + ("harness", "history", "report"):
         mod = importlib.import_module(f"benchmarks.{name}")
-        if name in SECTIONS + ("roofline",):
+        if name in SECTIONS:
             assert callable(getattr(mod, "main", None)), \
                 f"benchmarks.{name} lost its main()"
         print(f"dryrun/{name},0,import-ok")
@@ -77,8 +89,14 @@ def main() -> None:
     ap.add_argument("--dry-run", action="store_true",
                     help="import + entry-point check only, no measurements")
     ap.add_argument("--list", action="store_true",
-                    help="print every section and BENCH_*.json artifact, "
+                    help="print every section and BENCH_* artifact, "
                          "then exit (imports nothing)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every section on its tiny CI configuration")
+    ap.add_argument("--out-dir", default=".", metavar="DIR",
+                    help="directory receiving every BENCH_*.json artifact "
+                         "and the appended BENCH_history.jsonl (default: "
+                         "the current directory)")
     args = ap.parse_args()
     if args.list:
         list_sections()
@@ -98,23 +116,71 @@ def main() -> None:
     from benchmarks import (bench_adaptive, bench_averages, bench_balance,
                             bench_bsbm, bench_joins, bench_kernels,
                             bench_lubm, bench_serve_throughput)
+    from benchmarks.harness import emit_history
+    from benchmarks.history import RunContext
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    art = {name: os.path.join(out_dir, name) for name in ARTIFACTS}
+    smoke = ["--smoke"] if args.smoke else []
+    # one run identity for every section this invocation emits, so the
+    # history groups a whole bench pass under a single run_id
+    run_ctx = RunContext.create()
+
+    failures: list[str] = []
+
+    def record(section: str, call) -> None:
+        # one broken section must not zero out the whole perf trajectory:
+        # later sections still run and emit, the run exits nonzero at the
+        # end so CI sees the failure next to a complete history append
+        try:
+            result = call()
+        except Exception as exc:
+            failures.append(f"{section}: {type(exc).__name__}: {exc}")
+            print(f"{section}/FAILED,0,{type(exc).__name__}",
+                  file=sys.stderr)
+            return
+        for sec, res in (result.items() if section == "serve"
+                         else [(section, result)]):
+            if res:
+                emit_history(sec, res, out_dir, run=run_ctx)
+
     print("name,us_per_call,derived")
-    bench_joins.main()
-    bench_balance.main()
-    bench_lubm.main()
-    bench_bsbm.main()
-    bench_averages.main()
-    bench_serve_throughput.main(["--json", "BENCH_serve.json",
-                                 "--json-cache", "BENCH_cache.json",
-                                 "--json-latency", "BENCH_latency.json"])
-    bench_adaptive.main(["--json", "BENCH_adaptive.json"])
-    bench_kernels.main(["--json", "BENCH_kernels.json"])
+    record("bench_joins", lambda: bench_joins.main(smoke))
+    record("bench_balance", lambda: bench_balance.main(smoke))
+    record("bench_lubm", lambda: bench_lubm.main(smoke))
+    record("bench_bsbm", lambda: bench_bsbm.main(smoke))
+    record("bench_averages", lambda: bench_averages.main(smoke))
+    # the serve bench returns {"serve", "cache", "latency"} — each its own
+    # history section so their metric paths never collide
+    record("serve", lambda: {
+        f"bench_serve_{'throughput' if k == 'serve' else k}": v
+        for k, v in bench_serve_throughput.main(
+            ["--json", art["BENCH_serve.json"],
+             "--json-cache", art["BENCH_cache.json"],
+             "--json-latency", art["BENCH_latency.json"], *smoke]).items()})
+    record("bench_adaptive", lambda: bench_adaptive.main(
+        ["--json", art["BENCH_adaptive.json"], *smoke]))
+    record("bench_kernels", lambda: bench_kernels.main(
+        ["--json", art["BENCH_kernels.json"], *smoke]))
     if os.path.exists("results/dryrun.jsonl"):
         from benchmarks import roofline
-        roofline.main()
+        record("roofline", lambda: roofline.main(
+            ["--json", art["BENCH_roofline.json"]]))
     else:
         print("roofline/skipped,0,run launch/dryrun first", file=sys.stderr)
+    print(f"history/appended,0,run_id={run_ctx.run_id};out={out_dir}",
+          file=sys.stderr)
+    if failures:
+        print("failed sections:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":
+    if __package__ in (None, ""):
+        # `python benchmarks/run.py` (how CI's docs gate invokes --list)
+        # must resolve the `benchmarks` package like `-m benchmarks.run`
+        sys.path.insert(0, os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
     main()

@@ -21,7 +21,8 @@ from dataclasses import dataclass
 from repro.adaptive.drift import DriftDetector
 from repro.adaptive.repartition import (full_repartition,
                                         incremental_repartition)
-from repro.adaptive.stats import WorkloadTracker, uniform_baseline
+from repro.adaptive.stats import (WorkloadTracker, plan_shards,
+                                  uniform_baseline)
 
 
 @dataclass
@@ -90,10 +91,8 @@ class AdaptiveController:
     # ---- hooks the server calls ---------------------------------------
 
     def record(self, name: str, plan) -> None:
-        homes = plan.meta.get("homes") or []
-        shards = {s for h in homes for s in h} or {plan.ppn}
         self.tracker.observe(name, cut_joins=len(plan.cut_steps),
-                             shards=tuple(sorted(shards)))
+                             shards=plan_shards(plan))
         self._since_check += 1
 
     def maybe_adapt(self) -> AdaptEvent | None:

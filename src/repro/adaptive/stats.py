@@ -34,6 +34,20 @@ class WorkloadSnapshot:
         image of the paper's distributed-join objective."""
         return self.cut_joins / self.total if self.total else 0.0
 
+    def imbalance(self, n_shards: int) -> float:
+        """Max/mean of per-shard request touches across all `n_shards`.
+
+        1.0 is perfectly balanced; k means the hottest shard sees k times
+        the mean load. Shards absent from `shard_load` count as zero (an
+        untouched shard is exactly what imbalance should expose), and an
+        idle window reports 0.0.
+        """
+        if n_shards <= 0:
+            return 0.0
+        loads = [self.shard_load.get(s, 0) for s in range(n_shards)]
+        mean = sum(loads) / n_shards
+        return max(loads) / mean if mean else 0.0
+
 
 @dataclass
 class _Obs:
@@ -98,6 +112,18 @@ class WorkloadTracker:
         self._counts.clear()
         self._cut_joins = 0
         self._shard_load.clear()
+
+
+def plan_shards(plan) -> tuple[int, ...]:
+    """The shard ids a routed plan's data lives on, sorted.
+
+    Union of the plan's per-step home shards; a plan whose metadata lacks
+    homes (e.g. a centralized placement) attributes its load to the
+    partition-by number so every observation lands somewhere.
+    """
+    homes = plan.meta.get("homes") or []
+    shards = {s for h in homes for s in h} or {plan.ppn}
+    return tuple(sorted(shards))
 
 
 def uniform_baseline(names: list[str]) -> dict[str, float]:

@@ -38,6 +38,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.adaptive.stats import WorkloadTracker, plan_shards
 from repro.core.features import pattern_feature
 from repro.obs import DEFAULT_CLOCK, Telemetry
 from repro.core.partitioner import (Partitioning, centralized_partition,
@@ -264,13 +265,18 @@ class WorkloadServer:
         self._latencies: deque[tuple] = deque(maxlen=self.ANSWER_CACHE_CAP)
         self._seq = 0
 
+        # live shard-load telemetry runs even without an adaptive
+        # controller; when one attaches below, its tracker (sized by the
+        # adaptive window) takes over via the `tracker` property
+        self._tracker = WorkloadTracker()
+        self.adaptive = None
+
         plans = {q.name: make_plan(q, part,
                                    params=self.params_spec.get(q.name))
                  for q in self.queries}
         self._state = self._build_state(0, part, ShardedKG.build(part), plans)
         self._refresh_obs()
 
-        self.adaptive = None
         if adaptive is not None and adaptive is not False:
             from repro.adaptive.controller import (AdaptiveConfig,
                                                    AdaptiveController)
@@ -347,6 +353,19 @@ class WorkloadServer:
         bucket-level WawPart cut counts (0 = collective-free program)."""
         return [bucket_collectives(b.signature) for b in self._state.buckets]
 
+    @property
+    def tracker(self) -> WorkloadTracker:
+        """The live workload tracker feeding shard-load telemetry.
+
+        The adaptive controller's tracker when one is attached (it sizes
+        the window to the drift-check cadence), else the server's own
+        always-on tracker — so `shard_requests` gauges are published
+        whether or not adaptation is enabled.
+        """
+        if self.adaptive is not None:
+            return self.adaptive.tracker
+        return self._tracker
+
     def _refresh_obs(self) -> None:
         """Re-publish the state gauges (epoch, per-bucket cut collectives)
         for the current serving state; called at init and on every epoch
@@ -357,6 +376,27 @@ class WorkloadServer:
         for bi, b in enumerate(self._state.buckets):
             tele.gauge("cut_collectives", bucket_collectives(b.signature),
                        bucket=str(bi))
+        self._refresh_shard_load()
+
+    def _refresh_shard_load(self) -> None:
+        """Publish live per-shard load gauges from the tracker window.
+
+        `shard_requests{shard=s}` is the number of window requests whose
+        routed plan touched shard s (a request spanning k shards counts
+        once on each — exactly the load a cut join imposes), and
+        `shard_load_imbalance` is their max/mean across all shards.
+        The family is cleared first so a shard that fell out of the
+        window (or a migration that changed the shard count) never
+        leaves a stale gauge behind.
+        """
+        tele = self.telemetry
+        snap = self.tracker.snapshot()
+        n_shards = self._state.part.n_shards
+        tele.registry["shard_requests"].clear()
+        for s in range(n_shards):
+            tele.gauge("shard_requests", snap.shard_load.get(s, 0),
+                       shard=str(s))
+        tele.gauge("shard_load_imbalance", snap.imbalance(n_shards))
 
     def record_engine_costs(self) -> dict[str, list[float]]:
         """Publish XLA ``cost_analysis`` FLOPs/bytes per bucket engine.
@@ -581,6 +621,9 @@ class WorkloadServer:
         if self._track:
             if self.adaptive is not None:
                 self.adaptive.record(name, plan)
+            else:
+                self._tracker.observe(name, cut_joins=len(plan.cut_steps),
+                                      shards=plan_shards(plan))
             if plan.cut_steps:
                 tele.count("observed_cut_joins", len(plan.cut_steps),
                            template=name)
@@ -622,7 +665,7 @@ class WorkloadServer:
                                                  "epoch": st.epoch})
                     tele.trace.async_end(span, ticket.seq,
                                          ts=ticket.t_done)
-                self._latencies.append((ticket.t_enqueue, ticket.t_flush,
+                self._latencies.append((bi, ticket.t_enqueue, ticket.t_flush,
                                         ticket.t_dispatch, ticket.t_done))
                 return ticket
             tele.count("cache_misses", template=name)
@@ -660,6 +703,7 @@ class WorkloadServer:
                 self._flush(bi, "deadline", now)
         self._retire()
         self.telemetry.gauge("inflight", len(self._inflight))
+        self._refresh_shard_load()
         done = int(self.telemetry.total("served")) - before
         if done and self.adaptive is not None and self._track:
             self.adaptive.maybe_adapt()
@@ -686,6 +730,7 @@ class WorkloadServer:
         while self._inflight:
             self._complete(self._inflight.popleft())
         self.telemetry.gauge("inflight", 0)
+        self._refresh_shard_load()
         self.telemetry.check_invariants()
         return int(self.telemetry.total("served")) - before
 
@@ -698,31 +743,67 @@ class WorkloadServer:
         """Batches dispatched to the device but not yet extracted."""
         return len(self._inflight)
 
-    def latency_stats(self) -> dict:
+    _LATENCY_KEYS = ("p50_ms", "p95_ms", "p99_ms", "mean_ms", "max_ms",
+                     "queue_p99_ms", "service_p99_ms")
+
+    @classmethod
+    def _percentiles(cls, rows: list[tuple]) -> dict:
+        """Percentile block for one group of (bi, te, tf, td, tdone) rows.
+
+        Rows missing the flush stamp still contribute end-to-end latency
+        but are excluded from the queue/service leg split (a ticket can
+        only lack stamps if it was surfaced before its flush — the legs
+        would be meaningless for it).
+        """
+        te = np.asarray([r[1] for r in rows])
+        tdone = np.asarray([r[4] for r in rows])
+        total = (tdone - te) * 1e3
+        out = {"n": len(rows),
+               "p50_ms": float(np.percentile(total, 50)),
+               "p95_ms": float(np.percentile(total, 95)),
+               "p99_ms": float(np.percentile(total, 99)),
+               "mean_ms": float(total.mean()),
+               "max_ms": float(total.max()),
+               "queue_p99_ms": 0.0, "service_p99_ms": 0.0}
+        staged = [r for r in rows if r[2] is not None]
+        if staged:
+            queue = np.asarray([(r[2] - r[1]) for r in staged]) * 1e3
+            service = np.asarray([(r[4] - r[2]) for r in staged]) * 1e3
+            out["queue_p99_ms"] = float(np.percentile(queue, 99))
+            out["service_p99_ms"] = float(np.percentile(service, 99))
+        return out
+
+    def latency_stats(self, *, per_bucket: bool = False) -> dict:
         """Latency percentiles over the recorded request lifecycle stamps.
 
         Covers every request completed since the last reset_stats()
         (answer-cache hits included — their latency is the submit
         round-trip). Returns n plus p50/p95/p99/mean/max end-to-end
         latency in ms, and p99 of the queue (enqueue->flush) and service
-        (flush->done) legs; all zeros when nothing was recorded.
+        (flush->done) legs; all zeros when nothing was recorded. Rows
+        missing enqueue/done stamps are skipped; rows missing only the
+        flush stamp fall out of the leg percentiles (see _percentiles).
+
+        per_bucket=True additionally returns a ``"per_bucket"`` dict
+        mapping bucket index to the same percentile block over just that
+        bucket's requests — off by default since the grouping pass costs
+        a full scan of the latency window.
         """
-        keys = ("p50_ms", "p95_ms", "p99_ms", "mean_ms", "max_ms",
-                "queue_p99_ms", "service_p99_ms")
-        if not self._latencies:
-            return {"n": 0, **{k: 0.0 for k in keys}}
-        rec = np.asarray(self._latencies)
-        total = (rec[:, 3] - rec[:, 0]) * 1e3
-        queue = (rec[:, 1] - rec[:, 0]) * 1e3
-        service = (rec[:, 3] - rec[:, 1]) * 1e3
-        return {"n": int(rec.shape[0]),
-                "p50_ms": float(np.percentile(total, 50)),
-                "p95_ms": float(np.percentile(total, 95)),
-                "p99_ms": float(np.percentile(total, 99)),
-                "mean_ms": float(total.mean()),
-                "max_ms": float(total.max()),
-                "queue_p99_ms": float(np.percentile(queue, 99)),
-                "service_p99_ms": float(np.percentile(service, 99))}
+        rows = [r for r in self._latencies
+                if r[1] is not None and r[4] is not None]
+        if not rows:
+            out = {"n": 0, **{k: 0.0 for k in self._LATENCY_KEYS}}
+            if per_bucket:
+                out["per_bucket"] = {}
+            return out
+        out = self._percentiles(rows)
+        if per_bucket:
+            by_bucket: dict[int, list[tuple]] = {}
+            for r in rows:
+                by_bucket.setdefault(r[0], []).append(r)
+            out["per_bucket"] = {bi: self._percentiles(rs)
+                                 for bi, rs in sorted(by_bucket.items())}
+        return out
 
     def _sync_queues(self) -> None:
         """Re-route queued requests after an epoch bump (lazy).
@@ -866,8 +947,8 @@ class WorkloadServer:
                                args={"flush": t.flush_reason,
                                      "epoch": t.epoch})
                 tr.async_end(span, t.seq, ts=t.t_done)
-            self._latencies.append((t.t_enqueue, t.t_flush, t.t_dispatch,
-                                    t.t_done))
+            self._latencies.append((rec.bi, t.t_enqueue, t.t_flush,
+                                    t.t_dispatch, t.t_done))
             if fill:
                 key = (t.name, canonical_params(t.params,
                                                 rec.bucket.n_params))

@@ -295,6 +295,20 @@ def _sample(name: str, pairs: list[tuple[str, str]], value) -> str:
 _SAMPLE_RE = re.compile(
     r"^([a-zA-Z_][a-zA-Z0-9_]*)(?:\{(.*)\})?\s+(\S+)$")
 _LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+_ESCAPES = {"\\": "\\", '"': '"', "n": "\n"}
+
+
+def _unescape_label(value: str) -> str:
+    """Invert exposition label escaping in one pass.
+
+    Sequential ``str.replace`` chains corrupt values where an escaped
+    backslash precedes an ``n`` (``\\\\n`` — a literal backslash then the
+    letter n — would round-trip into a newline); a single left-to-right
+    scan consumes each escape exactly once.
+    """
+    return re.sub(r"\\(.)",
+                  lambda m: _ESCAPES.get(m.group(1), "\\" + m.group(1)),
+                  value)
 
 
 def parse_prometheus(text: str) -> dict[str, list[tuple[dict, float]]]:
@@ -313,8 +327,7 @@ def parse_prometheus(text: str) -> dict[str, list[tuple[dict, float]]]:
         if not m:
             raise MetricError(f"unparseable exposition line: {line!r}")
         name, labels_src, value = m.groups()
-        labels = {ln: lv.replace(r"\n", "\n").replace(r"\"", '"')
-                  .replace(r"\\", "\\")
+        labels = {ln: _unescape_label(lv)
                   for ln, lv in _LABEL_RE.findall(labels_src or "")}
         out.setdefault(name, []).append((labels, float(value)))
     return out
@@ -342,8 +355,13 @@ def snapshot_delta(new: dict, old: dict) -> dict:
                 base = prev["value"] if prev else 0
                 series.append({**s, "value": s["value"] - base})
             else:
-                bc = prev["cumulative"] if prev else [0] * len(
-                    s["cumulative"])
+                bc = prev["cumulative"] if prev else []
+                if len(bc) != len(s["cumulative"]):
+                    # bucket layout changed between snapshots (or the
+                    # series is new) — a subtraction would misalign, so
+                    # count from zero
+                    bc = [0] * len(s["cumulative"])
+                    prev = None
                 series.append({
                     **s,
                     "cumulative": [a - b for a, b in

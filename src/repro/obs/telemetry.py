@@ -53,6 +53,10 @@ SERVING_SCHEMA: tuple[tuple, ...] = (
      "Current serving-state epoch."),
     ("cut_collectives", "gauge", ("bucket",),
      "Collectives per dispatch for the bucket == WawPart cut count."),
+    ("shard_requests", "gauge", ("shard",),
+     "Requests in the tracker window touching the shard (live load)."),
+    ("shard_load_imbalance", "gauge", (),
+     "Max/mean of per-shard request touches over the tracker window."),
     ("engine_flops", "gauge", ("bucket",),
      "XLA cost_analysis FLOPs for the bucket's compiled engine."),
     ("engine_bytes", "gauge", ("bucket",),

@@ -1,0 +1,217 @@
+"""Bench history schema + noise-aware regression gate (ISSUE-9).
+
+The invariants this file owns:
+  * normalize() flattens a section result into schema-valid records —
+    one meta line, one metric line per finite numeric leaf, with the
+    PR-7 telemetry `metrics` sub-dict riding as notes (never as its own
+    series) and booleans/strings/non-finite floats excluded;
+  * the unit/direction policy maps metric paths the way the docs say
+    (qps higher-better, us_per_req lower-better, compile_ms ungated);
+  * gate_history() passes a stable trajectory, fails a 3x collapse
+    naming the offending metric, honors allow-regress patterns, and a
+    blessed baseline accepts an intentional regression without
+    rewriting history;
+  * append_history/load_history round-trip and reject malformed lines;
+  * tools/check_bench.py --self-test passes as a subprocess (what the
+    CI perf-gate job runs first).
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks import history as H
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RUN_TMPL = dict(sha="abc123", ts="2026-08-07T00:00:00Z",
+                backend="cpu", devices=1)
+
+
+def _run(i):
+    return H.RunContext(run_id=f"r{i}", **RUN_TMPL)
+
+
+def _append_run(path, i, result, section="bench_x"):
+    H.append_history(path, H.normalize(section, result, _run(i)))
+
+
+def test_normalize_shapes_and_notes():
+    res = {
+        "_meta": {"scale": 0.1, "seed": 0},
+        "wawpart": {
+            "batch64": {"qps": 1000.0, "us_per_req": 64.0, "ok": True,
+                        "label": "skipped-string",
+                        "metrics": {"served": 96, "cache_hits": 0}},
+            "collectives": [3, 0, 1],
+        },
+        "nan_leaf": float("nan"),
+    }
+    recs = H.normalize("bench_x", res, _run(0))
+    assert recs[0]["kind"] == "meta" and recs[0]["meta"]["scale"] == 0.1
+    metrics = {r["metric"]: r for r in recs[1:]}
+    # notes attach to the rows that sit beside the metrics sub-dict
+    assert metrics["wawpart.batch64.qps"]["notes"] == \
+        {"served": 96, "cache_hits": 0}
+    # list indices become dotted path components
+    assert metrics["wawpart.collectives.2"]["value"] == 1.0
+    # the telemetry sub-dict is not flattened into series of its own
+    assert not any(m.startswith("wawpart.batch64.metrics") for m in metrics)
+    # bools, strings and non-finite floats are not series either
+    assert "wawpart.batch64.ok" not in metrics
+    assert "wawpart.batch64.label" not in metrics
+    assert "nan_leaf" not in metrics
+    for r in recs:
+        assert H.validate_record(r) == []
+
+
+def test_unit_and_direction_policy():
+    assert H.unit_for("a.b.qps") == "qps"
+    assert H.unit_for("x.us_per_req") == "us"
+    assert H.unit_for("p99_ms") == "ms"
+    assert H.unit_for("rows.mrows_per_s") == "mrows/s"
+    assert H.unit_for("cache.hit_rate") == "ratio"
+    assert H.unit_for("collectives.2") == "count"
+    assert H.direction("a.qps") == 1
+    assert H.direction("a.us_per_req") == -1
+    assert H.direction("serve.p99_ms") == -1
+    # compile time is tracked but never gated (CI cache-state noise)
+    assert H.direction("a.compile_ms") == 0
+    assert H.direction("collectives.2") == 0
+    # index components inherit the parent name's semantics
+    assert H.direction("qps.3") == 1
+
+
+def test_gate_stable_then_collapse_then_allow(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    for i, q in enumerate([1000.0, 1010.0, 990.0, 1005.0]):
+        _append_run(path, i, {"qps": q, "us_per_req": 1e6 / q})
+    recs = H.load_history(path)
+    report = H.gate_history(recs)
+    assert report.ok and report.candidate_run == "r3"
+
+    # 3x collapse: the gate fails and names the metric
+    _append_run(path, 4, {"qps": 330.0, "us_per_req": 1e6 / 330.0})
+    recs = H.load_history(path)
+    report = H.gate_history(recs)
+    assert not report.ok
+    names = {f"{r.key[0]}/{r.key[1]}" for r in report.regressions}
+    assert "bench_x/qps" in names and "bench_x/us_per_req" in names
+
+    # allow-regress downgrades exactly those series
+    report = H.gate_history(recs, allow_regress=("bench_x/*",))
+    assert report.ok
+
+    # a blessed baseline at the new level accepts it without edits
+    blessed = {H.key_str(r.key): r.value for r in report.rows
+               if r.direction != 0}
+    report = H.gate_history(recs, blessed=blessed)
+    assert report.ok
+    assert all(r.source == "blessed" for r in report.rows
+               if r.direction != 0)
+
+
+def test_gate_new_and_informational_series(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    _append_run(path, 0, {"qps": 100.0, "collectives": [3, 1]})
+    report = H.gate_history(H.load_history(path))
+    by_status = {}
+    for r in report.rows:
+        by_status.setdefault(r.status, []).append(r.key[1])
+    # first-ever run: gated series are "new", undirected informational
+    assert by_status["new"] == ["qps"]
+    assert sorted(by_status["informational"]) == \
+        ["collectives.0", "collectives.1"]
+    assert report.ok
+
+
+def test_gate_thin_history_is_provisional(tmp_path):
+    # one prior run gives no noise estimate (MAD of a point is 0): even a
+    # wild swing must not fail the gate until min_prior runs exist
+    path = str(tmp_path / "h.jsonl")
+    _append_run(path, 0, {"qps": 1000.0})
+    _append_run(path, 1, {"qps": 250.0})
+    report = H.gate_history(H.load_history(path))
+    assert report.ok
+    (row,) = [r for r in report.rows if r.direction != 0]
+    assert row.status == "provisional" and row.n_prior == 1
+    assert row.baseline == pytest.approx(1000.0) and row.band is None
+    # min_prior=1 restores the old eager behavior and the swing regresses
+    report = H.gate_history(H.load_history(path), min_prior=1)
+    assert not report.ok
+    # a blessed baseline gates the series even below min_prior
+    blessed = {H.key_str(row.key): 1000.0}
+    report = H.gate_history(H.load_history(path), blessed=blessed)
+    assert [r.status for r in report.rows if r.direction != 0] \
+        == ["regressed"]
+
+
+def test_noise_band_floor_and_mad():
+    # quiet window: MAD is 0, the relative floor carries the band
+    assert H.noise_band([100.0] * 5, mad_scale=4.0, floor_frac=0.25,
+                        baseline=100.0) == pytest.approx(25.0)
+    # noisy window: the MAD term dominates a small floor
+    prior = [90.0, 110.0, 80.0, 120.0, 100.0]
+    band = H.noise_band(prior, mad_scale=4.0, floor_frac=0.01,
+                        baseline=100.0)
+    assert band == pytest.approx(4.0 * 1.4826 * 10.0)
+
+
+def test_history_round_trip_and_rejects(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    recs = H.normalize("bench_x", {"_meta": {"n": 1}, "ms": 2.0}, _run(0))
+    H.append_history(path, recs)
+    assert H.load_history(path) == recs
+    with pytest.raises(ValueError, match="invalid bench record"):
+        H.append_history(path, [{"kind": "metric"}])
+    with open(path, "a") as f:
+        f.write(json.dumps({"schema": 99, "kind": "metric"}) + "\n")
+    with pytest.raises(ValueError, match="schema"):
+        H.load_history(path)
+
+
+def test_sparkline_scaling():
+    assert H.sparkline([]) == ""
+    assert H.sparkline([5.0, 5.0, 5.0]) == "▁▁▁"
+    line = H.sparkline([0.0, 50.0, 100.0])
+    assert line[0] == "▁" and line[-1] == "█" and len(line) == 3
+
+
+def test_check_bench_self_test_subprocess():
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_bench.py"),
+         "--self-test"], capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "self-test OK" in out.stdout + out.stderr
+
+
+def test_check_bench_cli_gate_cycle(tmp_path):
+    """The CLI acceptance loop: pass -> fail on 3x -> bless -> pass."""
+    from tools import check_bench as cb
+    path = str(tmp_path / "BENCH_history.jsonl")
+    base = str(tmp_path / "BENCH_baseline.json")
+    for i, q in enumerate([1000.0, 1010.0, 990.0, 1005.0]):
+        _append_run(path, i, {"qps": q})
+    assert cb.main([path, "--baseline", base]) == 0
+    _append_run(path, 4, {"qps": 300.0})
+    rc = cb.main([path, "--baseline", base])
+    assert rc != 0
+    assert cb.main([path, "--baseline", base, "--update-baseline"]) == 0
+    assert os.path.exists(base)
+    # steady at the new level, judged against the blessed baseline
+    _append_run(path, 5, {"qps": 305.0})
+    assert cb.main([path, "--baseline", base]) == 0
+
+
+def test_harness_emit_history(tmp_path, monkeypatch):
+    """emit_history writes schema-valid records honoring BENCH_RUN_ID."""
+    from benchmarks.harness import emit_history
+    monkeypatch.setenv("BENCH_RUN_ID", "sharedrun")
+    out = emit_history("bench_x", {"_meta": {}, "ms": 1.5},
+                       str(tmp_path))
+    recs = H.load_history(out)
+    assert {r["run_id"] for r in recs} == {"sharedrun"}
+    assert recs[-1]["metric"] == "ms" and recs[-1]["unit"] == "ms"

@@ -165,6 +165,70 @@ def test_prometheus_round_trip():
     assert parsed["epoch"] == [({}, 2.0)]
 
 
+@pytest.mark.parametrize("label", [
+    "plain", 'quote" inside', "new\nline", "back\\slash",
+    "back\\slash then n", r"\n",          # literal backslash + n, no newline
+    "\\\n",                               # literal backslash THEN newline
+    'all \\ of " them\ntogether', "trailing\\",
+])
+def test_prometheus_label_escaping_round_trip(label):
+    """Every escapable label value survives exposition -> parse exactly.
+
+    The adversarial cases are literal-backslash-before-n: a sequential
+    unescape chain turns the escaped form of "\\n" (backslash + n) into
+    a real newline; the single-pass parser must not.
+    """
+    reg = MetricsRegistry()
+    reg.counter("served", "s", ("template",))
+    reg["served"].inc(1, template=label)
+    parsed = parse_prometheus(reg.to_prometheus())
+    assert parsed["served"] == [({"template": label}, 1.0)]
+
+
+def test_prometheus_fmt_edge_values():
+    """Exposition formats ints without a trailing .0, floats via repr,
+    and non-finite gauge values in a form its parser reads back."""
+    reg = MetricsRegistry()
+    reg.gauge("g", labels=("k",))
+    reg["g"].set(3.0, k="int")            # integral float -> "3"
+    reg["g"].set(-0.0, k="negzero")
+    reg["g"].set(float("inf"), k="inf")
+    reg["g"].set(2**63, k="big")          # large int stays exact
+    reg["g"].set(0.1, k="frac")           # repr keeps full precision
+    text = reg.to_prometheus()
+    assert 'g{k="int"} 3\n' in text + "\n"
+    assert 'g{k="big"} 9223372036854775808' in text
+    assert 'g{k="frac"} 0.1' in text
+    vals = {s[0]["k"]: s[1] for s in parse_prometheus(text)["g"]}
+    assert vals["inf"] == float("inf")
+    assert vals["negzero"] == 0.0
+    assert vals["big"] == float(2**63)
+
+
+def test_snapshot_delta_new_series_and_bucket_mismatch():
+    """Series existing only in the new snapshot count from zero, and a
+    histogram whose bucket layout changed between snapshots is treated
+    as new rather than misaligned-subtracted."""
+    reg = MetricsRegistry()
+    reg.counter("c", labels=("t",))
+    reg.histogram("h", labels=(), buckets=(1.0, 10.0))
+    old = reg.snapshot()                  # empty: no series yet
+    reg["c"].inc(2, t="a")
+    reg["h"].observe(0.5)
+    d = snapshot_delta(reg.snapshot(), old)
+    assert d["c"]["series"][0]["value"] == 2
+    assert d["h"]["series"][0]["count"] == 1
+    # stale snapshot with a different bucket layout: counted from zero
+    new = reg.snapshot()
+    stale = json.loads(json.dumps(old))
+    stale["h"] = {"kind": "histogram", "series": [
+        {"labels": {}, "cumulative": [5], "sum": 1.0, "count": 5}]}
+    d = snapshot_delta(new, stale)
+    (h,) = d["h"]["series"]
+    assert h["cumulative"] == new["h"]["series"][0]["cumulative"]
+    assert h["count"] == new["h"]["series"][0]["count"]
+
+
 # ---------------------------------------------------------------------------
 # serving integration
 # ---------------------------------------------------------------------------

@@ -192,3 +192,79 @@ def test_pipeline_bit_identical_jnp_and_pallas_vmap(lubm_served):
         assert srv.stats[Counter.FLUSH_DEADLINE] > 0
         for t, w in zip(tickets, want):
             assert _eq(t.result, w), (backend, t.name)
+
+
+def test_latency_stats_per_bucket_and_stamp_guard(lubm_served):
+    """latency_stats(per_bucket=True) groups by bucket index and its
+    percentile path survives rows with missing stage stamps (only the
+    affected rows/legs drop out, nothing raises)."""
+    qs, part = lubm_served
+    srv = WorkloadServer(qs, part, answer_cache=False,
+                         pipeline=PipelineConfig(deadline_ms=None,
+                                                 max_batch=64))
+    stream = [(qs[i % len(qs)].name, None) for i in range(10)]
+    srv.serve(stream)
+    base = srv.latency_stats()
+    assert "per_bucket" not in base              # opt-in only
+    ls = srv.latency_stats(per_bucket=True)
+    assert ls["n"] == 10
+    per = ls["per_bucket"]
+    assert per and all(isinstance(bi, int) for bi in per)
+    assert sum(b["n"] for b in per.values()) == ls["n"]
+    routed = {srv.route[n][0] for n, _ in stream}
+    assert set(per) == routed
+    for b in per.values():
+        assert b["p99_ms"] >= b["p50_ms"] >= 0.0
+    # defensively injected bad rows: missing done/enqueue stamps are
+    # skipped, a missing flush stamp only drops the queue/service legs
+    srv._latencies.append((0, 1.0, None, None, None))
+    srv._latencies.append((0, None, None, None, 2.0))
+    srv._latencies.append((0, 1.0, None, None, 1.5))
+    ls2 = srv.latency_stats(per_bucket=True)
+    assert ls2["n"] == 11
+    assert ls2["per_bucket"][0]["n"] == per[0]["n"] + 1
+
+
+def test_shard_load_gauges_match_tracker(lubm_served):
+    """The live shard_requests gauges equal the tracker window's
+    per-shard touch counts (absent shards read 0) and the imbalance
+    gauge equals the snapshot's max/mean — with and without an
+    attached adaptive controller."""
+    from repro.adaptive.controller import AdaptiveConfig
+
+    qs, part = lubm_served
+    stream = request_stream(qs, 24)
+    for adaptive in (None, AdaptiveConfig(check_every=10**9)):
+        srv = WorkloadServer(qs, part, answer_cache=False,
+                             adaptive=adaptive)
+        srv.serve(stream)
+        snap = srv.tracker.snapshot()
+        assert snap.total == 24
+        series = srv.telemetry.snapshot()["shard_requests"]["series"]
+        gauges = {int(s["labels"]["shard"]): s["value"] for s in series}
+        assert set(gauges) == set(range(part.n_shards))
+        for s in range(part.n_shards):
+            assert gauges[s] == snap.shard_load.get(s, 0)
+        (imb,) = srv.telemetry.snapshot()["shard_load_imbalance"]["series"]
+        assert imb["value"] == pytest.approx(snap.imbalance(part.n_shards))
+        # warmup / paused tracking must not feed the gauges
+        with srv.tracking_paused():
+            srv.serve(stream[:4])
+        assert srv.tracker.snapshot().total == 24
+
+
+def test_tracker_imbalance_properties():
+    """WorkloadSnapshot.imbalance: 1.0 when uniform, max/mean when
+    skewed, 0.0 for an idle window or zero shards."""
+    from repro.adaptive.stats import WorkloadTracker
+
+    tr = WorkloadTracker(window=8)
+    assert tr.snapshot().imbalance(4) == 0.0
+    for s in range(4):
+        tr.observe("q", shards=(s,))
+    assert tr.snapshot().imbalance(4) == pytest.approx(1.0)
+    tr.observe("q", shards=(0, 0))               # shard 0 twice in one plan
+    snap = tr.snapshot()
+    assert snap.shard_load[0] == 3
+    assert snap.imbalance(4) == pytest.approx(3 / (6 / 4))
+    assert snap.imbalance(0) == 0.0

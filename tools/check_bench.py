@@ -1,0 +1,234 @@
+"""Perf-regression gate (CI perf-gate job): the bench trajectory in
+``BENCH_history.jsonl`` must not silently get worse.
+
+For every (section, metric, backend, devices) series with a known
+direction (see ``benchmarks.history.direction``), the newest run is
+judged against a baseline — the median of the last ``--window`` prior
+runs — with a noise-aware band: ``max(mad_scale * 1.4826 * MAD,
+floor_pct% of baseline)``. A value outside the band on the *bad* side is
+a regression: nonzero exit, every offender named. Metrics with no
+direction policy are reported as informational only, and a series with
+fewer than ``--min-prior`` prior runs is *provisional* — there is no
+noise estimate to gate against yet, so it is tracked but cannot fail
+(a blessed baseline gates it regardless: blessing is explicit).
+
+Accepting an intentional regression:
+  * one-off: ``--allow-regress 'SECTION/METRIC'`` (fnmatch patterns,
+    matched against ``section/metric`` and the bare metric path);
+  * durable: ``--update-baseline`` writes the newest run's gated values
+    into the baseline file (default ``BENCH_baseline.json`` next to the
+    history); blessed values override the history median until a newer
+    blessing replaces them.
+
+``--self-test`` builds a synthetic history in a temp dir and asserts the
+gate passes on stable runs, fails (naming the metric) on a 3x
+degradation, and passes again after a blessing — covered in tier-1 so
+the gate itself cannot rot.
+
+Run from the repo root:
+    python tools/check_bench.py BENCH_history.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks import history as H   # noqa: E402
+
+
+def load_baseline(path: str) -> dict[str, float]:
+    """{series-key string: blessed value} from a baseline file, {} when
+    the file does not exist (a missing baseline is not an error — the
+    history median is the default baseline)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or not all(
+            isinstance(v, (int, float)) for v in data.values()):
+        raise ValueError(f"{path}: baseline must map series keys to "
+                         "numeric values")
+    return {k: float(v) for k, v in data.items()}
+
+
+def write_baseline(path: str, report: H.GateReport) -> int:
+    """Bless the candidate run: write every gated series' current value."""
+    blessed = {H.key_str(r.key): r.value for r in report.rows
+               if r.direction != 0}
+    with open(path, "w") as f:
+        json.dump(blessed, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return len(blessed)
+
+
+def run_gate(history_path: str, *, baseline_path: str, window: int,
+             mad_scale: float, floor_pct: float,
+             allow_regress: tuple[str, ...], update_baseline: bool,
+             verbose: bool, min_prior: int = 2) -> int:
+    records = H.load_history(history_path)
+    runs = H.run_order(records)
+    report = H.gate_history(
+        records, window=window, mad_scale=mad_scale,
+        floor_frac=floor_pct / 100.0, min_prior=min_prior,
+        allow_regress=allow_regress,
+        blessed=load_baseline(baseline_path))
+
+    if update_baseline:
+        n = write_baseline(baseline_path, report)
+        print(f"check_bench: blessed {n} series from run "
+              f"{report.candidate_run!r} into {baseline_path}")
+        return 0
+
+    counts = {"ok": 0, "improved": 0, "new": 0, "provisional": 0,
+              "informational": 0}
+    for r in report.rows:
+        if r.status in counts:
+            counts[r.status] += 1
+        if verbose and r.status != "informational":
+            base = "n/a" if r.baseline is None else f"{r.baseline:g}"
+            band = "n/a" if r.band is None else f"{r.band:g}"
+            print(f"  [{r.status:>8}] {H.key_str(r.key)}: {r.value:g} "
+                  f"(baseline {base} ± {band}, {r.n_prior} prior, "
+                  f"{r.source})")
+    for r in report.regressions:
+        sec, metric, backend, devices = r.key
+        worse = "below" if r.direction > 0 else "above"
+        print(f"PERF REGRESSION: {sec}/{metric} [{backend} x{devices}]: "
+              f"{r.value:g} is {worse} baseline {r.baseline:g} "
+              f"by more than the allowed band {r.band:g} "
+              f"({r.n_prior}-run {r.source} baseline)", file=sys.stderr)
+    print(f"check_bench: {len(runs)} runs, {len(report.rows)} series "
+          f"(candidate {report.candidate_run!r}): "
+          f"{counts['ok']} ok, {counts['improved']} improved, "
+          f"{counts['new']} new, {counts['provisional']} provisional, "
+          f"{counts['informational']} informational, "
+          f"{len(report.regressions)} regressed")
+    return 1 if report.regressions else 0
+
+
+# ---------------------------------------------------------------------------
+# --self-test: the gate gates, the blessing blesses
+# ---------------------------------------------------------------------------
+
+def _synthetic_history(path: str, qps_per_run: list[float],
+                       start: int = 0) -> None:
+    """Append runs whose serving qps follows `qps_per_run` and whose
+    latency stays flat (both directions must be exercised); `start`
+    offsets the run ids so successive appends extend one history."""
+    for i, qps in enumerate(qps_per_run):
+        run = H.RunContext(run_id=f"run{start + i}", sha="selftest",
+                           ts="1970-01-01T00:00:00Z", backend="cpu",
+                           devices=1)
+        H.append_history(path, H.normalize(
+            "bench_serve_throughput",
+            {"_meta": {"n_requests": 16},
+             "wawpart": {"batch64": {"qps": qps,
+                                     "us_per_req": 1e6 / qps},
+                         "batch64_shard_map": {"collectives": [3, 0, 1]}},
+             "p99_ms": 4.0 + 0.01 * (start + i)},
+            run))
+
+
+def self_test() -> int:
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        hist = os.path.join(td, H.HISTORY_NAME)
+        base = os.path.join(td, "BENCH_baseline.json")
+        common = dict(baseline_path=base, window=5, mad_scale=4.0,
+                      floor_pct=25.0, allow_regress=(),
+                      update_baseline=False, verbose=False)
+
+        # 0. two runs with wild jitter: one prior run is no noise
+        # estimate, so every series is provisional and the gate passes
+        _synthetic_history(hist, [1000.0, 700.0])
+        assert run_gate(hist, **common) == 0, \
+            "thin history must be provisional, not regressed"
+
+        # 1. stable runs (small jitter) must pass
+        _synthetic_history(hist, [1010.0, 990.0, 1005.0], start=2)
+        assert run_gate(hist, **common) == 0, "stable history must pass"
+
+        # 2. a 3x qps collapse must fail and name the metric
+        _synthetic_history(hist, [330.0], start=5)
+        import contextlib
+        import io
+        err = io.StringIO()
+        with contextlib.redirect_stderr(err):
+            rc = run_gate(hist, **common)
+        assert rc != 0, "3x degradation must fail the gate"
+        assert "wawpart.batch64.qps" in err.getvalue(), err.getvalue()
+
+        # 3. one-off allow-regress accepts the degraded serving row
+        assert run_gate(hist, **{**common, "allow_regress":
+                                 ("*batch64.*",)}) == 0
+
+        # 4. blessing the degraded run makes it the new baseline
+        assert run_gate(hist, **{**common, "update_baseline": True}) == 0
+        _synthetic_history(hist, [332.0], start=6)  # steady at new level
+        assert run_gate(hist, **common) == 0, "blessed level must pass"
+
+        # 5. informational metrics never gate: collectives changed freely
+        recs = H.load_history(hist)
+        assert any(r["kind"] == "metric"
+                   and r["metric"].endswith("collectives.0")
+                   for r in recs), "flattening lost the collectives list"
+    print("check_bench: self-test OK")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("history", nargs="?", default=H.HISTORY_NAME,
+                    help="BENCH_history.jsonl to gate (newest run judged)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="blessed-baseline JSON (default: "
+                         "BENCH_baseline.json next to the history)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="prior runs per series the baseline median uses")
+    ap.add_argument("--mad-scale", type=float, default=4.0,
+                    help="allowed deviation in MAD-estimated sigmas")
+    ap.add_argument("--floor-pct", type=float, default=25.0,
+                    help="minimum allowed deviation as %% of baseline "
+                         "(absorbs jitter while the history is short)")
+    ap.add_argument("--min-prior", type=int, default=2,
+                    help="prior runs a series needs before it can fail "
+                         "the gate (below: provisional, tracked only)")
+    ap.add_argument("--allow-regress", action="append", default=[],
+                    metavar="PATTERN",
+                    help="fnmatch pattern (vs 'section/metric' or bare "
+                         "metric) whose regressions are accepted; repeat "
+                         "for multiple patterns")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="bless the newest run: write its gated values to "
+                         "the baseline file and exit 0")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the synthetic fail/bless/pass scenario and "
+                         "exit (no history file needed)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every gated series' verdict")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+    if not os.path.exists(args.history):
+        print(f"check_bench: no history at {args.history}", file=sys.stderr)
+        return 1
+    baseline = args.baseline or os.path.join(
+        os.path.dirname(os.path.abspath(args.history)),
+        "BENCH_baseline.json")
+    return run_gate(args.history, baseline_path=baseline,
+                    window=args.window, mad_scale=args.mad_scale,
+                    floor_pct=args.floor_pct, min_prior=args.min_prior,
+                    allow_regress=tuple(args.allow_regress),
+                    update_baseline=args.update_baseline,
+                    verbose=args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
