@@ -1,0 +1,177 @@
+"""Goodput + tail latency under injected faults (repro.faults).
+
+Three configurations serve the same paced request stream through the
+continuous-batching pipeline, sharing one EngineCache (identical bucket
+signatures — nobody pays a differential compile):
+
+  * fault_free — no injector, no retry: the baseline the recovery run's
+    answers are verified against (bit-identical or typed rejection);
+  * recovery   — a seeded FaultPlan (dispatch failures + one shard-down
+    window) with the RetryPolicy on: transient failures re-dispatch with
+    backoff, the down window serves covered templates exactly from
+    replicas and sheds the rest typed;
+  * no_retry   — the same FaultPlan with retries off: every failed
+    dispatch sheds its tickets on the first attempt. The goodput floor.
+
+Reported per configuration: goodput (answered requests / wall second),
+p99 end-to-end latency over answered requests, answered fraction, and
+the recovery counters (retries / shed / timeouts / degraded_served plus
+what the injector actually fired). The bench *asserts* the differential:
+every answered recovery/no-retry request is bit-identical to fault-free,
+and recovery answers strictly more requests than no-retry.
+
+--smoke runs a tiny configuration (CI chaos-smoke job); --json PATH
+writes the result dict (BENCH_chaos.json — gated via the perf history).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _p99_ms(tickets) -> float:
+    import numpy as np
+    lat = [t.latency_s * 1e3 for t in tickets if t.error is None]
+    return float(np.percentile(np.asarray(lat), 99)) if lat else 0.0
+
+
+def run(scale: float = 0.1, requests: int = 480, batch: int = 32,
+        arrival_ms: float = 1.0, deadline_ms: float = 10.0,
+        n_shards: int = 3, fail_rate: float = 0.25, seed: int = 0) -> dict:
+    import numpy as np
+
+    from repro.core.partitioner import wawpart_partition
+    from repro.engine.batch import EngineCache
+    from repro.faults import FaultInjector, FaultPlan, RetryPolicy
+    from repro.kg.generator import generate_lubm
+    from repro.kg.workloads import lubm_queries
+    from repro.launch.serve import (PipelineConfig, WorkloadServer,
+                                    replay_paced, request_stream)
+
+    store = generate_lubm(1, scale=scale, seed=seed)
+    queries = lubm_queries()
+    part = wawpart_partition(store, queries, n_shards=n_shards)
+    cache = EngineCache()
+
+    # replicas are the degraded mode's spare capacity: replicate the hot
+    # cut features once and serve every configuration on that placement
+    setup = WorkloadServer(queries, part, cache=cache)
+    setup.replicate_hot()
+    base_part = setup.part
+
+    stream = request_stream(queries, requests)
+
+    # reference answers from a healthy synchronous pass (params are None,
+    # so one answer per template covers the whole stream)
+    ref_server = WorkloadServer(queries, base_part, cache=cache,
+                                answer_cache=False)
+    reference = {q.name: r for q, r in
+                 zip(queries, ref_server.serve([(q.name, None)
+                                                for q in queries]))}
+
+    # down the shard with the most replica-covered primaries, so the
+    # window exercises re-homing (not just shedding)
+    covered = [sum(1 for u, s in base_part.unit_shard.items()
+                   if s == shard and any(t != shard for t in
+                                         base_part.replicas.get(u, ())))
+               for shard in range(n_shards)]
+    down = int(np.argmax(covered))
+    horizon = requests * arrival_ms / 1e3
+    plan = FaultPlan(seed=seed, dispatch_fail_rate=fail_rate,
+                     shard_down=((down, 0.25 * horizon, 0.55 * horizon),))
+    retry = RetryPolicy(max_attempts=6, base_ms=0.5, cap_ms=8.0, seed=seed)
+
+    def config(faults, policy) -> dict:
+        server = WorkloadServer(
+            queries, base_part, cache=cache, answer_cache=False,
+            pipeline=PipelineConfig(deadline_ms=deadline_ms,
+                                    max_batch=batch))
+        # warm every bucket + partial-batch shape on the shared cache
+        # *before* arming the injector: its time windows are relative to
+        # the first serving poll, and warmup must not eat them
+        for i in range(0, len(stream), batch):
+            server.warmup(stream[i:i + batch])
+        for n in (1, 2, 4, 8, 16):
+            if n <= batch:
+                server.warmup(stream[:n])
+        server.faults = FaultInjector(faults) if faults is not None else None
+        server.retry = policy
+        server.reset_stats()
+
+        dt, tickets = replay_paced(server, stream, arrival_ms / 1e3)
+        answered = [t for t in tickets if t.error is None]
+        for t in answered:
+            ref = reference[t.name]
+            assert (np.array_equal(t.result[0], ref[0])
+                    and t.result[1] == ref[1] and t.result[2] == ref[2]), \
+                f"{t.name}: answered request diverged from fault-free"
+        st = server.stats
+        inj = server.faults.injected if server.faults is not None else {}
+        return {"qps": len(answered) / dt,
+                "p99_ms": _p99_ms(tickets),
+                "ok_fraction": len(answered) / len(tickets),
+                "answered": len(answered),
+                "shed_total": st["shed"], "retries_total": st["retries"],
+                "timeouts_total": st["timeouts"],
+                "degraded_served_total": st["degraded_served"],
+                "injected_dispatch": int(inj.get("dispatch", 0)),
+                "elapsed_s": dt}
+
+    fault_free = config(None, None)
+    recovery = config(plan, retry)
+    no_retry = config(plan, None)
+
+    assert fault_free["ok_fraction"] == 1.0, "fault-free run shed requests"
+    assert no_retry["injected_dispatch"] > 0, \
+        "the fault schedule never fired — the comparison is vacuous"
+    assert recovery["answered"] > no_retry["answered"], (
+        f"retry must strictly beat no-retry goodput: "
+        f"{recovery['answered']} vs {no_retry['answered']} answered")
+
+    return {
+        "_meta": {"n_triples": len(store), "requests": requests,
+                  "batch": batch, "arrival_ms": arrival_ms,
+                  "deadline_ms": deadline_ms, "n_shards": n_shards,
+                  "fail_rate": fail_rate, "down_shard": down,
+                  "seed": seed},
+        "fault_free": fault_free,
+        "recovery": recovery,
+        "no_retry": no_retry,
+    }
+
+
+def emit(res: dict) -> None:
+    """``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract)."""
+    for label in ("fault_free", "recovery", "no_retry"):
+        r = res[label]
+        print(f"chaos/{label},{1e6 / max(r['qps'], 1e-9):.1f},"
+              f"goodput_qps={r['qps']:.0f};p99_ms={r['p99_ms']:.2f};"
+              f"ok={r['ok_fraction']:.3f};retries={r['retries_total']};"
+              f"shed={r['shed_total']}")
+    gain = res["recovery"]["answered"] - res["no_retry"]["answered"]
+    print(f"chaos/retry_gain,{gain},requests_recovered_vs_no_retry")
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full result dict as JSON")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        res = run(scale=0.05, requests=192, batch=16, arrival_ms=1.0)
+    else:
+        res = run()
+    emit(res)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"chaos/json,0,wrote_{args.json}", file=sys.stderr)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   §3.2   distributed-join counts + traffic (the objective)
   §Serve batched workload-serving throughput (beyond-paper)
   §Adapt adaptive vs static serving under workload drift (beyond-paper)
+  §Chaos goodput + p99 under injected faults, retry vs no-retry
   §Kern  jnp vs Pallas kg_scan/kg_join query kernels (beyond-paper)
   §Roofline (if results/dryrun.jsonl exists)
 
@@ -29,11 +30,12 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import sys
 
 SECTIONS = ("bench_joins", "bench_balance", "bench_lubm", "bench_bsbm",
             "bench_averages", "bench_serve_throughput", "bench_adaptive",
-            "bench_kernels", "roofline")
+            "bench_chaos", "bench_kernels", "roofline")
 
 # artifact -> (producer module, producing flag, one-line summary); --list
 # prints this table and docs/benchmarks.md documents each row's schema
@@ -50,6 +52,10 @@ ARTIFACTS = {
     "BENCH_adaptive.json": (
         "bench_adaptive", "--json",
         "adaptive vs static serving across a two-phase workload drift"),
+    "BENCH_chaos.json": (
+        "bench_chaos", "--json",
+        "goodput + p99 under injected faults: retry vs no-retry vs "
+        "fault-free"),
     "BENCH_kernels.json": (
         "bench_kernels", "--json",
         "jnp vs Pallas kg_scan/kg_join kernel micro + end-to-end serve"),
@@ -97,6 +103,12 @@ def main() -> None:
                     help="directory receiving every BENCH_*.json artifact "
                          "and the appended BENCH_history.jsonl (default: "
                          "the current directory)")
+    ap.add_argument("--section-timeout", type=int, default=0,
+                    metavar="SECONDS",
+                    help="per-section wall-clock budget (SIGALRM; 0 = "
+                         "unlimited): a hung section is recorded as failed "
+                         "and the remaining sections still run — a "
+                         "process-level `timeout` would lose them all")
     args = ap.parse_args()
     if args.list:
         list_sections()
@@ -114,8 +126,9 @@ def main() -> None:
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
     from benchmarks import (bench_adaptive, bench_averages, bench_balance,
-                            bench_bsbm, bench_joins, bench_kernels,
-                            bench_lubm, bench_serve_throughput)
+                            bench_bsbm, bench_chaos, bench_joins,
+                            bench_kernels, bench_lubm,
+                            bench_serve_throughput)
     from benchmarks.harness import emit_history
     from benchmarks.history import RunContext
 
@@ -128,13 +141,39 @@ def main() -> None:
     run_ctx = RunContext.create()
 
     failures: list[str] = []
+    can_alarm = args.section_timeout > 0 and hasattr(signal, "SIGALRM")
+
+    def bounded(call):
+        # per-section wall-clock budget: a hung bench raises in place and
+        # is recorded as a failure like any other broken section
+        if not can_alarm:
+            return call()
+
+        def _expired(signum, frame):
+            raise TimeoutError(
+                f"section exceeded --section-timeout="
+                f"{args.section_timeout}s")
+
+        old = signal.signal(signal.SIGALRM, _expired)
+        signal.alarm(args.section_timeout)
+        try:
+            return call()
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)
 
     def record(section: str, call) -> None:
         # one broken section must not zero out the whole perf trajectory:
         # later sections still run and emit, the run exits nonzero at the
-        # end so CI sees the failure next to a complete history append
+        # end so CI sees the failure next to a complete history append.
+        # SystemExit is caught too — an argparse error or sys.exit() in a
+        # section is a section failure, not the harness's exit
         try:
-            result = call()
+            result = bounded(call)
+        except SystemExit as exc:
+            failures.append(f"{section}: SystemExit: {exc.code}")
+            print(f"{section}/FAILED,0,SystemExit", file=sys.stderr)
+            return
         except Exception as exc:
             failures.append(f"{section}: {type(exc).__name__}: {exc}")
             print(f"{section}/FAILED,0,{type(exc).__name__}",
@@ -161,6 +200,8 @@ def main() -> None:
              "--json-latency", art["BENCH_latency.json"], *smoke]).items()})
     record("bench_adaptive", lambda: bench_adaptive.main(
         ["--json", art["BENCH_adaptive.json"], *smoke]))
+    record("bench_chaos", lambda: bench_chaos.main(
+        ["--json", art["BENCH_chaos.json"], *smoke]))
     record("bench_kernels", lambda: bench_kernels.main(
         ["--json", art["BENCH_kernels.json"], *smoke]))
     if os.path.exists("results/dryrun.jsonl"):

@@ -23,6 +23,7 @@ from repro.adaptive.repartition import (full_repartition,
                                         incremental_repartition)
 from repro.adaptive.stats import (WorkloadTracker, plan_shards,
                                   uniform_baseline)
+from repro.faults import MigrationAbortedError
 
 
 @dataclass
@@ -46,6 +47,7 @@ class AdaptEvent:
     severity: str                   # drift severity that fired
     divergence: float
     mode: str                       # "incremental" | "full" | "noop"
+                                    # | "aborted" (prepare rolled back)
     moved_triples: int              # triples actually migrated (0 on noop)
     proposed_triples: int           # movement of the (possibly unapplied)
                                     # proposal the check produced
@@ -134,7 +136,13 @@ class AdaptiveController:
         migration = None
         mode = result.mode
         if result.mode != "noop" and result.improved:
-            migration = server.migrate(result.part)
+            try:
+                migration = server.migrate(result.part)
+            except MigrationAbortedError:
+                # the prepare phase rolled back (injected abort, or the
+                # server is degraded): the old epoch keeps serving; the
+                # noop cooldown below re-scores after the window turns
+                mode = "aborted"
         else:
             mode = "noop"
         event = AdaptEvent(

@@ -38,6 +38,7 @@ across backends on every path (vmap, shard_map, adaptive migration).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import NamedTuple
 
@@ -599,12 +600,24 @@ class EngineCache:
     kernel tile sizes key the cache the same way: a jnp engine and a pallas
     engine for one signature — or two pallas engines with different
     KernelBlocks — are distinct compiled programs and must never collide.
+
+    `capacity` bounds the cache with LRU eviction (a drifting workload
+    can mint unboundedly many bucket signatures across migrations —
+    compiled-engine memory must not grow without limit); ``None`` keeps
+    the historical unbounded behavior. `evictions` counts engines
+    dropped; the serving layer republishes it into the obs registry
+    (`engine_cache_evictions`).
     """
 
-    def __init__(self) -> None:
-        self._fns: dict = {}
+    def __init__(self, capacity: int | None = None) -> None:
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"EngineCache capacity must be >= 1 or None, "
+                             f"got {capacity}")
+        self._fns: OrderedDict = OrderedDict()
+        self.capacity = capacity
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, sig: BucketSignature, *, join_impl: str = "expand",
             max_per_row: int | None = None, gather_cap: int | None = None,
@@ -617,7 +630,8 @@ class EngineCache:
         ``kernel_blocks`` select the execution backend and its tile sizes
         (validated here via ``check_backend`` — raises ValueError on an
         unknown backend or a non-``KernelBlocks`` tiling). Every argument
-        is part of the cache key; `hits`/`misses` count lookups.
+        is part of the cache key; `hits`/`misses` count lookups, and a
+        hit refreshes the entry's LRU position when the cache is capped.
         """
         blocks = check_backend(backend, kernel_blocks)
         key = (sig, join_impl, max_per_row, gather_cap, axis_name, mesh,
@@ -640,9 +654,23 @@ class EngineCache:
                              axis_name=axis_name),           # shard axis
                     in_axes=(None, None, None, 0, 0)))       # batch axis
             self._fns[key] = fn
+            while self.capacity is not None \
+                    and len(self._fns) > self.capacity:
+                self._fns.popitem(last=False)
+                self.evictions += 1
         else:
             self.hits += 1
+            self._fns.move_to_end(key)
         return fn
+
+    def __len__(self) -> int:
+        """Compiled engines currently held."""
+        return len(self._fns)
+
+    def __bool__(self) -> bool:
+        """Always truthy: an empty cache is still a cache (``__len__``
+        would otherwise make `cache or EngineCache()` drop a fresh one)."""
+        return True
 
 
 def engine_cost(fn, *args) -> dict:
@@ -829,7 +857,7 @@ def run_batched(bucket: PlanBucket, kg: ShardedKG,
         requests = [(i, None) for i in range(len(bucket.plans))]
     exec_reqs, inverse = dedup_requests(requests, bucket.n_params) if dedup \
         else (requests, None)
-    cache = cache or EngineCache()
+    cache = cache if cache is not None else EngineCache()
     fn = cache.get(bucket.signature, join_impl=join_impl,
                    max_per_row=max_per_row, gather_cap=gather_cap, mesh=mesh,
                    backend=backend, kernel_blocks=kernel_blocks)

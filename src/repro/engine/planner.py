@@ -130,13 +130,18 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
               cap_margin: float = 1.5, min_cap: int = 64,
               max_cap: int = 1 << 17,
               params: dict[tuple[int, int], int] | None = None,
-              capacities: tuple[list[int], int] | None = None) -> PhysicalPlan:
+              capacities: tuple[list[int], int] | None = None,
+              forbid_ppn: frozenset | None = None) -> PhysicalPlan:
     """Build the physical plan for query q under a partitioning.
 
     params: {(pattern_idx, triple_pos): param_index} marks constants that are
     replaced at run time from a params vector (batched serving).
     capacities: optional ([scan_cap per step], table_cap) override; otherwise
     sized from a host-side oracle simulation of the chosen join order.
+    forbid_ppn: shards excluded from the primary-processing-node choice
+    (degraded serving must never home a plan's extraction on a down shard —
+    the tie-break default is shard 0, which could be the dead one). Raises
+    ValueError if every shard is forbidden.
     """
     store = part.catalog.store
     d = store.dictionary
@@ -158,7 +163,11 @@ def make_plan(q: Query, part: Partitioning, *, order: str = "selectivity",
             counts[next(iter(h))] += 1
     # ppn comes from *primary* homes only, so replication never moves a
     # query's primary shard — unaffected plans stay bit-identical.
-    ppn = max(range(part.n_shards), key=lambda s: (counts[s], -s))
+    candidates = [s for s in range(part.n_shards)
+                  if not forbid_ppn or s not in forbid_ppn]
+    if not candidates:
+        raise ValueError("forbid_ppn excludes every shard")
+    ppn = max(candidates, key=lambda s: (counts[s], -s))
 
     # Replicas can make ppn self-sufficient for a pattern: when every
     # routing unit has a copy (primary or replica) on ppn, the step scans

@@ -1,0 +1,42 @@
+"""Fault tolerance for the serving stack: deterministic chaos injection
+and the recovery policies that absorb it.
+
+Production serving cannot assume every dispatch succeeds, every shard
+stays up, and every migration completes — distributed RDF stores treat
+retry/replica-failover as table stakes (AdPart keeps serving through
+incremental redistribution; Peng et al.'s workload-based fragmentation
+absorbs node faults through replicated fragments). This package provides:
+
+* :mod:`repro.faults.errors` — the typed fault taxonomy and the
+  transient-vs-permanent classifier the retry layer consults;
+* :mod:`repro.faults.inject` — a seeded :class:`FaultPlan` /
+  :class:`FaultInjector` pair (injectable-clock-driven, like
+  ``PipelineConfig``) that can fail a dispatch, delay a bucket flush,
+  mark a shard down for a window, or abort a migration mid-apply —
+  strictly a no-op when disabled;
+* :mod:`repro.faults.retry` — :class:`RetryPolicy`, exponential backoff
+  with decorrelated jitter plus per-ticket absolute deadlines;
+* :mod:`repro.faults.degraded` — replica-aware degraded placement: when
+  a shard is down, units with live replica copies re-home so covered
+  templates keep serving exactly, uncovered ones shed fast.
+
+``WorkloadServer(faults=..., retry=...)`` threads all four through the
+continuous-batching pipeline; ``serve.py --chaos SPEC`` does the same
+from the CLI. See docs/architecture.md ("Failure handling") for the
+retry/shed/degraded state machine.
+"""
+from .errors import (DeadlineExceededError, InjectedDispatchError,
+                     MigrationAbortedError, RetryExhaustedError,
+                     ServingFault, ShardDownError, ShutdownError, classify)
+from .inject import FaultInjector, FaultPlan
+from .retry import RetryPolicy
+from .degraded import degraded_placement, uncovered_templates
+
+__all__ = [
+    "ServingFault", "InjectedDispatchError", "ShardDownError",
+    "DeadlineExceededError", "RetryExhaustedError", "MigrationAbortedError",
+    "ShutdownError", "classify",
+    "FaultPlan", "FaultInjector",
+    "RetryPolicy",
+    "degraded_placement", "uncovered_templates",
+]

@@ -49,6 +49,10 @@ from repro.engine.batch import (EngineCache, bucket_collectives, bucket_plans,
                                 pad_requests_pow2, shard_perms, stage_batch)
 from repro.engine.federated import ShardedKG
 from repro.engine.planner import make_plan
+from repro.faults import (DeadlineExceededError, FaultInjector, FaultPlan,
+                          MigrationAbortedError, RetryExhaustedError,
+                          RetryPolicy, ShardDownError, ShutdownError,
+                          classify, degraded_placement, uncovered_templates)
 from repro.kg.generator import generate_bsbm, generate_lubm
 from repro.kg.workloads import bsbm_queries, lubm_queries
 
@@ -73,6 +77,13 @@ class Counter(str, enum.Enum):
     FLUSH_FULL = "flush_full"          # dispatches cut by a full bucket queue
     FLUSH_DEADLINE = "flush_deadline"  # dispatches cut by a deadline expiry
     FLUSH_DRAIN = "flush_drain"        # dispatches cut by drain()/serve()
+    RETRIES = "retries"                # tickets re-enqueued after a transient
+    TIMEOUTS = "timeouts"              # tickets shed past their retry deadline
+    SHED = "shed"                      # tickets resolved with a typed error
+    DEGRADED_SERVED = "degraded_served"  # served exactly while a shard is down
+    SHARD_DOWN = "shard_down"          # degraded-mode activations
+    MIGRATION_ABORTS = "migration_aborts"  # migrate() prepares rolled back
+    ENGINE_CACHE_EVICTIONS = "engine_cache_evictions"  # LRU engine evictions
 
 
 @dataclass(frozen=True)
@@ -111,7 +122,14 @@ class Ticket:
     call issued), done (results extracted) — ``latency_s`` is end-to-end.
     ``epoch`` records the serving epoch the request executed against and
     ``flush_reason`` which trigger cut its batch ("full" | "deadline" |
-    "drain"; "hit" for answer-cache hits that never queued).
+    "drain"; "hit" for answer-cache hits that never queued; "shed" for
+    tickets resolved with a typed error before any dispatch).
+
+    ``attempts`` counts dispatch attempts under a RetryPolicy; a ticket
+    that exhausts its budget (or hits a permanent fault, its absolute
+    retry deadline, or an uncovered degraded template) resolves with
+    ``done=True``, ``result=None``, and the typed fault in ``error`` —
+    callers distinguish answers from rejections by ``error is None``.
     """
 
     name: str
@@ -127,6 +145,8 @@ class Ticket:
     epoch: int | None = None
     flush_reason: str | None = None
     cache_hit: bool = False
+    attempts: int = 0
+    error: Exception | None = None
 
     @property
     def latency_s(self) -> float:
@@ -145,6 +165,7 @@ class _Inflight(NamedTuple):
     inverse: list | None              # fan-out map, None when dedup is off
     out: tuple                        # engine output (table, mask, overflow)
     epoch: int                        # serving epoch at dispatch
+    degraded: bool = False            # dispatched while a shard was down
 
 
 _UNSET = object()     # "use the config default" sentinel for submit()
@@ -164,6 +185,7 @@ class _ServingState(NamedTuple):
     tr: object
     va: object
     perms: object
+    shed: frozenset = frozenset()     # templates shed while degraded
 
 
 class WorkloadServer:
@@ -214,6 +236,17 @@ class WorkloadServer:
     (`engine/batch.stage_batch`, up to max_inflight outstanding batches).
     The synchronous `serve()` is a thin wrapper over submit+drain and
     returns bit-identical results to pre-pipeline serving.
+
+    faults (a `FaultPlan` or `FaultInjector`, repro.faults) arms seeded
+    deterministic fault injection: dispatch failures, flush delays,
+    shard-down windows, and migration aborts. retry (a `RetryPolicy`)
+    enables transient-failure recovery — failed flushes re-enqueue their
+    surviving tickets at the queue front (epoch/seq order preserved) with
+    exponential backoff + decorrelated jitter; exhausted tickets resolve
+    to typed errors instead of poisoning drain(). Both default to None,
+    and the fault-free fast path is byte-for-byte the pre-fault code:
+    with faults=None and retry=None no try/except wraps the dispatch and
+    results are bit-identical to a server built without these knobs.
     """
 
     ANSWER_CACHE_CAP = 65536
@@ -227,7 +260,9 @@ class WorkloadServer:
                  answer_cache: bool | int = True,
                  backend: str = "jnp", kernel_blocks=None,
                  pipeline: PipelineConfig | None = None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 faults: FaultPlan | FaultInjector | None = None,
+                 retry: RetryPolicy | None = None):
         """Build the serving state for `part` and compile nothing yet.
 
         `telemetry` attaches an observability bundle (labeled metrics +
@@ -265,6 +300,19 @@ class WorkloadServer:
         self._latencies: deque[tuple] = deque(maxlen=self.ANSWER_CACHE_CAP)
         self._seq = 0
 
+        self.retry = retry
+        if faults is None:
+            self.faults = None
+        elif isinstance(faults, FaultInjector):
+            self.faults = faults
+        else:
+            self.faults = FaultInjector(faults)
+        self._retry_after: dict[int, float] = {}   # bucket -> backoff until
+        self._backoff_prev: dict[int, float] = {}  # bucket -> last backoff
+        self._degraded: int | None = None          # down shard, if any
+        self._pre_degraded: _ServingState | None = None
+        self._evictions_seen = self.cache.evictions
+
         # live shard-load telemetry runs even without an adaptive
         # controller; when one attaches below, its tracker (sized by the
         # adaptive window) takes over via the `tracker` property
@@ -286,7 +334,8 @@ class WorkloadServer:
     # ---- state ---------------------------------------------------------
 
     def _build_state(self, epoch: int, part: Partitioning, kg: ShardedKG,
-                     plans: dict) -> _ServingState:
+                     plans: dict, shed: frozenset = frozenset(),
+                     ) -> _ServingState:
         import jax
         import jax.numpy as jnp
 
@@ -302,7 +351,7 @@ class WorkloadServer:
             tr, va, pe = (jax.device_put(a, s) for a, s in
                           zip((tr, va, pe), kg_shardings(self.mesh)))
         return _ServingState(epoch, part, kg, plans, buckets, route,
-                             tr, va, pe)
+                             tr, va, pe, shed)
 
     @property
     def part(self) -> Partitioning:
@@ -326,8 +375,21 @@ class WorkloadServer:
 
     @property
     def epoch(self) -> int:
-        """Serving epoch: bumped by every migrate()/replicate_hot()."""
+        """Serving epoch: bumped by every migrate()/replicate_hot()
+        (and by mark_shard_down()/mark_shard_up() transitions)."""
         return self._state.epoch
+
+    @property
+    def degraded(self) -> int | None:
+        """The down shard the server is currently serving around, or
+        None when every shard is healthy."""
+        return self._degraded
+
+    @property
+    def shed_templates(self) -> frozenset:
+        """Templates rejected under the current epoch (no live replica
+        coverage while degraded); empty when healthy."""
+        return self._state.shed
 
     @property
     def n_buckets(self) -> int:
@@ -437,6 +499,16 @@ class WorkloadServer:
     def migrate(self, new_part: Partitioning) -> dict:
         """Swap the server onto a new placement of the same store.
 
+        Transactional: the whole next serving state is *prepared* first —
+        KG deltas applied, plans rewritten, buckets rebuilt — and only
+        then *committed* by the atomic epoch swap. Any exception during
+        prepare rolls back cleanly (the old epoch keeps serving, no
+        ticket is lost or duplicated, `migration_aborts` counts the
+        rollback) and surfaces as `MigrationAbortedError` (ValueError for
+        bad input passes through unchanged). Migration is refused while
+        degraded — a placement computed against the healthy topology must
+        not land while a shard is down.
+
         Sequencing per the migration contract:
           1. per-shard triple deltas applied to the ShardedKG (block
              capacity kept when the new shards still fit, so engines keep
@@ -462,34 +534,55 @@ class WorkloadServer:
         from repro.adaptive.migrate import MigrationPlan
 
         st = self._state
-        mig = MigrationPlan.build(st.part, new_part)
-        kg = mig.apply_kg(st.kg, new_part)
+        try:
+            # ---- prepare: build the entire next state off to the side
+            if self._degraded is not None:
+                raise MigrationAbortedError(
+                    f"migration refused while shard {self._degraded} is "
+                    f"down (degraded placement is temporary)")
+            mig = MigrationPlan.build(st.part, new_part)
+            kg = mig.apply_kg(st.kg, new_part)
+            if self.faults is not None:
+                self.faults.check_migration_abort()
 
-        same_catalog = new_part.catalog is st.part.catalog
-        moved_units = set()
-        if same_catalog:
-            keys = set(st.part.unit_shard) | set(new_part.unit_shard)
-            moved_units = {u for u in keys
-                           if st.part.unit_shard.get(u)
-                           != new_part.unit_shard.get(u)}
-        plans: dict = {}
-        rewritten = 0
-        for q in self.queries:
-            old_plan = st.plans[q.name]
-            # same catalog => same unit_shard key set (incremental moves
-            # reassign values only), so one placement's resolution covers
-            # both sides of the move
-            if same_catalog and not self._query_units(q, new_part) \
-                    & moved_units:
-                plans[q.name] = old_plan
-                continue
-            caps = ([s.scan_cap for s in old_plan.steps], old_plan.table_cap)
-            plans[q.name] = make_plan(q, new_part,
-                                      params=self.params_spec.get(q.name),
-                                      capacities=caps)
-            rewritten += 1
+            same_catalog = new_part.catalog is st.part.catalog
+            moved_units = set()
+            if same_catalog:
+                keys = set(st.part.unit_shard) | set(new_part.unit_shard)
+                moved_units = {u for u in keys
+                               if st.part.unit_shard.get(u)
+                               != new_part.unit_shard.get(u)}
+            plans: dict = {}
+            rewritten = 0
+            for q in self.queries:
+                old_plan = st.plans[q.name]
+                # same catalog => same unit_shard key set (incremental moves
+                # reassign values only), so one placement's resolution covers
+                # both sides of the move
+                if same_catalog and not self._query_units(q, new_part) \
+                        & moved_units:
+                    plans[q.name] = old_plan
+                    continue
+                caps = ([s.scan_cap for s in old_plan.steps],
+                        old_plan.table_cap)
+                plans[q.name] = make_plan(q, new_part,
+                                          params=self.params_spec.get(q.name),
+                                          capacities=caps)
+                rewritten += 1
 
-        new_state = self._build_state(st.epoch + 1, new_part, kg, plans)
+            new_state = self._build_state(st.epoch + 1, new_part, kg, plans)
+        except Exception as exc:
+            # ---- rollback: nothing was swapped; old epoch keeps serving
+            self.telemetry.count("migration_aborts")
+            self.telemetry.trace.instant(
+                "migration_abort", args={"epoch": st.epoch,
+                                         "error": type(exc).__name__})
+            if isinstance(exc, (MigrationAbortedError, ValueError)):
+                raise
+            raise MigrationAbortedError(
+                f"migration prepare failed: {exc}") from exc
+
+        # ---- commit: the atomic swap (nothing below can throw partway)
         old_sigs = {b.signature for b in st.buckets}
         new_sigs = {b.signature for b in new_state.buckets}
         self._state = new_state
@@ -592,6 +685,136 @@ class WorkloadServer:
             cap_grew=kg.cap > st.kg.cap)
         return out
 
+    # ---- degraded mode (shard down) -------------------------------------
+
+    def mark_shard_down(self, shard: int) -> dict:
+        """Enter degraded mode: serve around `shard` using live replicas.
+
+        Builds the degraded primary-only placement (repro.faults
+        `degraded_placement`: units homed on the down shard re-home onto
+        a live replica holder), re-plans every still-coverable template
+        with the down shard forbidden as the plan's primary (`make_plan
+        forbid_ppn` — capacities reused, so surviving bucket signatures
+        keep their compiled engines), and swaps the state under a new
+        epoch. Covered templates keep serving *exactly* — the same rows
+        exist, on live shards. Templates needing a unit whose only copy
+        was on the down shard go into the state's `shed` set: queued
+        tickets for them resolve immediately with `ShardDownError`, and
+        new submits shed fast without ever queueing.
+
+        The pre-degraded state is saved verbatim for `mark_shard_up()`.
+        Raises RuntimeError if already degraded (one down shard at a
+        time) and ValueError for a shard outside the placement. Returns
+        a report dict: epoch, shard, shed_templates, lost_units,
+        rehomed_units.
+        """
+        if self._degraded is not None:
+            raise RuntimeError(f"already degraded (shard {self._degraded} "
+                               f"down); mark_shard_up() first")
+        st = self._state
+        tele = self.telemetry
+        dpart, lost = degraded_placement(st.part, shard)
+        shed = uncovered_templates(self.queries, dpart, lost)
+        rehomed = sum(1 for u, s in st.part.unit_shard.items()
+                      if s == shard and dpart.unit_shard[u] != shard)
+        plans: dict = {}
+        for q in self.queries:
+            old_plan = st.plans[q.name]
+            if q.name in shed:
+                # kept so buckets/route still cover the template (the
+                # shed check fires before any dispatch can reach it)
+                plans[q.name] = old_plan
+                continue
+            caps = ([s.scan_cap for s in old_plan.steps], old_plan.table_cap)
+            plans[q.name] = make_plan(q, dpart,
+                                      params=self.params_spec.get(q.name),
+                                      capacities=caps,
+                                      forbid_ppn=frozenset({shard}))
+        kg = ShardedKG.build(dpart, min_cap=st.kg.cap)
+        new_state = self._build_state(st.epoch + 1, dpart, kg, plans,
+                                      shed=shed)
+        self._pre_degraded = st
+        self._degraded = shard
+        self._state = new_state
+        self._answers.clear()      # cached answers assume the healthy epoch
+        self._answers_epoch = new_state.epoch
+        self._retry_after.clear()  # backoff lanes are per-epoch buckets
+        self._backoff_prev.clear()
+        self._refresh_obs()
+        tele.count("epoch_bumps", kind="degrade")
+        tele.count("shard_down", shard=str(shard))
+        tele.trace.instant("shard_down",
+                           args={"shard": shard, "epoch": new_state.epoch,
+                                 "shed_templates": len(shed)})
+        # already-queued tickets for uncovered templates shed now — they
+        # can never dispatch under this epoch
+        self._sync_queues()
+        for bi in list(self._queues):
+            keep = [t for t in self._queues[bi] if t.name not in shed]
+            for t in self._queues[bi]:
+                if t.name in shed:
+                    self._resolve_error(
+                        t, ShardDownError(
+                            f"template {t.name!r} has no live replica "
+                            f"coverage with shard {shard} down"), bi=bi)
+            if keep:
+                self._queues[bi] = keep
+            else:
+                del self._queues[bi]
+            tele.gauge("queue_depth", len(keep), bucket=str(bi))
+        return {"epoch": new_state.epoch, "shard": shard,
+                "shed_templates": sorted(shed), "lost_units": len(lost),
+                "rehomed_units": rehomed}
+
+    def mark_shard_up(self) -> dict | None:
+        """Leave degraded mode: restore the saved healthy state.
+
+        The pre-degraded placement, KG, and plans swap back under a new
+        epoch (`epoch_bumps{kind=restore}`) — bucket signatures match the
+        healthy ones, so the EngineCache serves every engine without a
+        recompile. Queued tickets re-route lazily (`_sync_queues`), the
+        answer cache drops (degraded-epoch answers are fine but the
+        epoch-version contract is one cache per epoch). No-op returning
+        None when not degraded.
+        """
+        if self._degraded is None:
+            return None
+        saved = self._pre_degraded
+        st = self._state
+        new_state = self._build_state(st.epoch + 1, saved.part, saved.kg,
+                                      saved.plans)
+        self._state = new_state
+        self._degraded = None
+        self._pre_degraded = None
+        self._answers.clear()
+        self._answers_epoch = new_state.epoch
+        self._retry_after.clear()
+        self._backoff_prev.clear()
+        self._refresh_obs()
+        self.telemetry.count("epoch_bumps", kind="restore")
+        self.telemetry.trace.instant("shard_up",
+                                     args={"epoch": new_state.epoch})
+        return {"epoch": new_state.epoch}
+
+    def _poll_faults(self, now: float) -> None:
+        """Drive injector-scheduled shard-down windows off the clock.
+
+        Called at the top of submit/pump/drain: enters degraded mode when
+        a window opens, restores when it closes (windows are relative to
+        the injector's arming — its first poll).
+        """
+        inj = self.faults
+        if inj is None or not inj.enabled:
+            return
+        down = inj.shard_down_now(now)
+        if down == self._degraded:
+            return
+        if self._degraded is not None:
+            self.mark_shard_up()
+        if down is not None:
+            inj.injected["shard_down"] += 1
+            self.mark_shard_down(down)
+
     # ---- continuous-batching pipeline ----------------------------------
 
     def submit(self, name: str, params: np.ndarray | None = None, *,
@@ -609,8 +832,14 @@ class WorkloadServer:
 
         Raises KeyError for a template name outside the workload and
         ValueError for a param vector wider than the bucket executes with.
+
+        While degraded (a shard down), a template in the state's shed set
+        returns an already-done Ticket carrying a `ShardDownError` — the
+        fast typed rejection — instead of queueing work that could never
+        dispatch exactly.
         """
         now = self.pipeline.clock()
+        self._poll_faults(now)
         self._sync_queues()
         st = self._state
         tele = self.telemetry
@@ -638,6 +867,13 @@ class WorkloadServer:
                         deadline_s=None if budget is None
                         else now + budget / 1e3)
         self._seq += 1
+
+        if st.shed and name in st.shed:
+            self._resolve_error(
+                ticket, ShardDownError(
+                    f"template {name!r} has no live replica coverage "
+                    f"with shard {self._degraded} down"), bi=bi)
+            return ticket
 
         if self._answers and self._answers_epoch != st.epoch:
             self._answers.clear()
@@ -686,16 +922,28 @@ class WorkloadServer:
         ready. Returns the number of requests completed by this call.
         Drives the adaptive drift check after completions, mirroring the
         synchronous path's between-batches cadence.
+
+        A bucket inside its retry backoff window (a transient dispatch
+        failure re-enqueued its tickets) or an injected flush-delay
+        window is skipped this pump — its tickets dispatch on a later
+        pump or at drain().
         """
+        now = self.pipeline.clock()
+        self._poll_faults(now)
         self._sync_queues()
         before = int(self.telemetry.total("served"))
-        now = self.pipeline.clock()
         for bi in list(self._queues):
-            while len(self._queues.get(bi, ())) >= self.pipeline.max_batch:
+            while (len(self._queues.get(bi, ())) >= self.pipeline.max_batch
+                   and not self._in_backoff(bi, now)
+                   and not (self.faults is not None
+                            and self.faults.flush_delayed(bi, now))):
                 self._flush(bi, "full", now, limit=self.pipeline.max_batch)
         for bi in list(self._queues):
             q = self._queues.get(bi)
-            if not q:
+            if not q or self._in_backoff(bi, now):
+                continue
+            if self.faults is not None and \
+                    self.faults.flush_delayed(bi, now):
                 continue
             due = min((t.deadline_s for t in q if t.deadline_s is not None),
                       default=None)
@@ -720,19 +968,77 @@ class WorkloadServer:
         counter invariants from docs/architecture.md are enforced
         (`Telemetry.check_invariants`) — a RuntimeError here means a
         serving-path accounting bug, not bad user input.
+
+        Under fault injection / retry, drain ignores backoff and
+        flush-delay windows (it is the barrier) and keeps flushing until
+        the queues are empty: every re-enqueued ticket either dispatches
+        successfully or exhausts its attempts into a typed error, so
+        termination is bounded by the retry budget.
         """
+        now = self.pipeline.clock()
+        self._poll_faults(now)
         self._sync_queues()
         before = int(self.telemetry.total("served"))
-        now = self.pipeline.clock()
-        for bi in list(self._queues):
-            if self._queues.get(bi):
-                self._flush(bi, "drain", now)
+        rounds = 0
+        while self._queues:
+            now = self.pipeline.clock()
+            for bi in list(self._queues):
+                if self._queues.get(bi):
+                    self._flush(bi, "drain", now)
+            rounds += 1
+            if rounds > 100_000:
+                raise RuntimeError("drain() made no progress after "
+                                   "100000 flush rounds")
         while self._inflight:
             self._complete(self._inflight.popleft())
         self.telemetry.gauge("inflight", 0)
         self._refresh_shard_load()
         self.telemetry.check_invariants()
         return int(self.telemetry.total("served")) - before
+
+    def shutdown(self, grace_s: float = 2.0) -> dict:
+        """Graceful-shutdown barrier with a bounded grace budget.
+
+        Tries to drain normally for up to `grace_s` seconds on the
+        pipeline clock (backoff and delay windows are ignored, like
+        drain); once the budget expires — or immediately when
+        ``grace_s <= 0`` — every still-queued ticket resolves with a
+        typed `ShutdownError` (counted as shed, so the telemetry
+        invariants hold for the partial run). In-flight batches always
+        complete: their work is already on the device. Returns
+        {"drained": n, "shed": n}; the invariants are checked before
+        returning, exactly as a full drain would.
+        """
+        clock = self.pipeline.clock
+        deadline = clock() + max(0.0, grace_s)
+        before = int(self.telemetry.total("served"))
+        self._sync_queues()
+        if grace_s > 0:
+            rounds = 0
+            while self._queues and clock() < deadline:
+                now = clock()
+                for bi in list(self._queues):
+                    if self._queues.get(bi):
+                        self._flush(bi, "drain", now)
+                    if clock() >= deadline:
+                        break
+                rounds += 1
+                if rounds > 100_000:
+                    break
+        shed_n = 0
+        for bi in list(self._queues):
+            for t in self._queues.pop(bi):
+                self._resolve_error(
+                    t, ShutdownError("server shutting down"), bi=bi)
+                shed_n += 1
+            self.telemetry.gauge("queue_depth", 0, bucket=str(bi))
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+        self.telemetry.gauge("inflight", 0)
+        self._refresh_shard_load()
+        self.telemetry.check_invariants()
+        drained = int(self.telemetry.total("served")) - before - shed_n
+        return {"drained": drained, "shed": shed_n}
 
     def queue_depth(self) -> int:
         """Requests enqueued but not yet flushed into a dispatch."""
@@ -865,11 +1171,25 @@ class WorkloadServer:
         tele.observe("dedup_fanout", len(take) / len(unique), bucket=b_lab)
         fn = self._engine(bucket)
         t_stage = tr.clock() if tr.enabled else now
-        pd, params = stage_batch(bucket, pad_requests_pow2(unique),
-                                 mesh=self.mesh)
-        t_call = tr.clock() if tr.enabled else now
-        with tele.annotation(f"dispatch/bucket{bi}"):
-            out = fn(st.tr, st.va, st.perms, pd, params)
+        if self.faults is None and self.retry is None:
+            # fault-free fast path: byte-for-byte the pre-fault dispatch
+            pd, params = stage_batch(bucket, pad_requests_pow2(unique),
+                                     mesh=self.mesh)
+            t_call = tr.clock() if tr.enabled else now
+            with tele.annotation(f"dispatch/bucket{bi}"):
+                out = fn(st.tr, st.va, st.perms, pd, params)
+        else:
+            try:
+                if self.faults is not None:
+                    self.faults.on_dispatch(bi)
+                pd, params = stage_batch(bucket, pad_requests_pow2(unique),
+                                         mesh=self.mesh)
+                t_call = tr.clock() if tr.enabled else now
+                with tele.annotation(f"dispatch/bucket{bi}"):
+                    out = fn(st.tr, st.va, st.perms, pd, params)
+            except Exception as exc:
+                self._flush_failed(bi, take, exc, now)
+                return
         t_dispatch = self.pipeline.clock()
         if tr.enabled:
             lane = f"bucket{bi}"
@@ -882,10 +1202,107 @@ class WorkloadServer:
             t.t_dispatch = t_dispatch
             t.epoch = st.epoch
         self._inflight.append(_Inflight(bucket, bi, take, unique, inverse,
-                                        out, st.epoch))
+                                        out, st.epoch,
+                                        self._degraded is not None))
         while len(self._inflight) > self.pipeline.max_inflight:
             self._complete(self._inflight.popleft())
         tele.gauge("inflight", len(self._inflight))
+
+    def _in_backoff(self, bi: int, now: float) -> bool:
+        """Whether bucket bi sits inside a retry backoff window."""
+        return self._retry_after.get(bi, 0.0) > now
+
+    def _resolve_error(self, ticket: Ticket, err: Exception, *, bi: int,
+                       timeout: bool = False) -> None:
+        """Resolve one ticket to a typed error result (counted as shed).
+
+        The ticket completes like any served request — done flips, the
+        latency is observed, the trace span closes — but `result` stays
+        None and `error` carries the typed fault. `served` still counts
+        it (the request got a definitive answer: a rejection), keeping
+        the invariant served == cache_hits + executed + deduped + shed.
+        """
+        now = self.pipeline.clock()
+        ticket.error = err
+        ticket.result = None
+        ticket.done = True
+        ticket.epoch = self._state.epoch
+        ticket.t_done = now
+        if ticket.flush_reason is None:
+            ticket.flush_reason = "shed"
+        tele = self.telemetry
+        tele.count("served", template=ticket.name)
+        tele.count("shed", template=ticket.name)
+        if timeout:
+            tele.count("timeouts", template=ticket.name)
+        tele.observe("request_latency_ms",
+                     (now - ticket.t_enqueue) * 1e3)
+        if tele.trace.enabled:
+            span = f"ticket/{ticket.name}"
+            tele.trace.async_begin(span, ticket.seq, ts=ticket.t_enqueue,
+                                   args={"error": type(err).__name__,
+                                         "epoch": ticket.epoch})
+            tele.trace.async_end(span, ticket.seq, ts=now)
+        self._latencies.append((bi, ticket.t_enqueue, ticket.t_flush,
+                                ticket.t_dispatch, now))
+
+    def _flush_failed(self, bi: int, take: list[Ticket], exc: Exception,
+                      now: float) -> None:
+        """Recover from a failed dispatch of bucket bi's cut tickets.
+
+        Classification (repro.faults.classify) splits the world in two:
+        a *permanent* fault (CapacityOverflowError, bad-input errors) —
+        or any fault with no RetryPolicy attached — resolves every ticket
+        in the cut to a typed error immediately. A *transient* fault
+        re-enqueues the surviving tickets at the *front* of the bucket's
+        queue (their seq order is preserved, so epoch ordering and
+        re-routing stay correct) and arms an exponential backoff +
+        decorrelated jitter window for the bucket; tickets past the
+        policy's absolute deadline resolve as timeouts, tickets out of
+        attempts as RetryExhaustedError.
+        """
+        tele = self.telemetry
+        kind = classify(exc)
+        if tele.trace.enabled:
+            tele.trace.instant("dispatch_fault",
+                               args={"bucket": bi, "kind": kind,
+                                     "error": type(exc).__name__})
+        policy = self.retry
+        if kind == "permanent" or policy is None:
+            for t in take:
+                t.attempts += 1
+                self._resolve_error(t, exc, bi=bi)
+            return
+        survivors: list[Ticket] = []
+        for t in take:
+            t.attempts += 1
+            hard = None if policy.deadline_ms is None \
+                else t.t_enqueue + policy.deadline_ms / 1e3
+            if hard is not None and now >= hard:
+                self._resolve_error(
+                    t, DeadlineExceededError(
+                        f"{t.name!r} past its {policy.deadline_ms:g} ms "
+                        f"retry deadline after {t.attempts} attempts"),
+                    bi=bi, timeout=True)
+            elif t.attempts >= policy.max_attempts:
+                err = RetryExhaustedError(
+                    f"{t.attempts} dispatch attempts failed for "
+                    f"{t.name!r}: {exc}")
+                err.__cause__ = exc
+                self._resolve_error(t, err, bi=bi)
+            else:
+                survivors.append(t)
+        if not survivors:
+            return
+        tele.count("retries", len(survivors), bucket=str(bi))
+        # front of the queue: a retried ticket never reorders behind
+        # requests submitted after it (take was cut in seq order)
+        self._queues[bi] = survivors + self._queues.get(bi, [])
+        tele.gauge("queue_depth", len(self._queues[bi]), bucket=str(bi))
+        back = policy.backoff_s(max(t.attempts for t in survivors),
+                                self._backoff_prev.get(bi))
+        self._backoff_prev[bi] = back
+        self._retry_after[bi] = now + back
 
     def _retire(self) -> int:
         """Complete in-flight batches whose device results are ready.
@@ -939,6 +1356,8 @@ class WorkloadServer:
             t.t_done = now
             t.done = True
             tele.count("served", template=t.name)
+            if rec.degraded:
+                tele.count("degraded_served", template=t.name)
             tele.observe("request_latency_ms",
                          (t.t_done - t.t_enqueue) * 1e3)
             if tr.enabled:
@@ -984,12 +1403,22 @@ class WorkloadServer:
         return [t.result for t in tickets]
 
     def _engine(self, bucket):
-        """The compiled engine for `bucket` under this server's options."""
-        return self.cache.get(bucket.signature, join_impl=self.join_impl,
-                              max_per_row=self.max_per_row,
-                              gather_cap=self.gather_cap, mesh=self.mesh,
-                              backend=self.backend,
-                              kernel_blocks=self.kernel_blocks)
+        """The compiled engine for `bucket` under this server's options.
+
+        Publishes the EngineCache's LRU eviction delta (the cache may be
+        shared across servers, so each server counts only what it saw
+        grow)."""
+        fn = self.cache.get(bucket.signature, join_impl=self.join_impl,
+                            max_per_row=self.max_per_row,
+                            gather_cap=self.gather_cap, mesh=self.mesh,
+                            backend=self.backend,
+                            kernel_blocks=self.kernel_blocks)
+        ev = self.cache.evictions
+        if ev > self._evictions_seen:
+            self.telemetry.count("engine_cache_evictions",
+                                 ev - self._evictions_seen)
+            self._evictions_seen = ev
+        return fn
 
     @contextmanager
     def tracking_paused(self):
@@ -1189,6 +1618,21 @@ def main() -> None:
                     help="wrap the serving loop in jax.profiler.trace(DIR) "
                          "for an XLA-level profile (TensorBoard/Perfetto) "
                          "alongside the app-level --trace-out")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="arm seeded deterministic fault injection, e.g. "
+                         "'dispatch=0.1/4,down=1@0.2:0.6,seed=7' (see "
+                         "repro.faults.FaultPlan.parse); transient-failure "
+                         "retries are on by default under chaos")
+    ap.add_argument("--no-retry", action="store_true",
+                    help="disable the RetryPolicy under --chaos: a failed "
+                         "dispatch sheds its tickets with typed errors on "
+                         "the first attempt (the goodput baseline "
+                         "bench_chaos compares against)")
+    ap.add_argument("--grace-ms", type=float, default=2000.0,
+                    help="graceful-shutdown budget on Ctrl-C: queued "
+                         "requests get this long to drain before being "
+                         "shed with a typed ShutdownError; --trace-out/"
+                         "--metrics-out artifacts are still written")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -1234,12 +1678,16 @@ def main() -> None:
                                   min_requests=min(64, args.batch))
     telemetry = Telemetry(trace=args.trace_out is not None,
                           annotate=args.profile is not None)
+    fault_plan = FaultPlan.parse(args.chaos) if args.chaos else None
+    retry = RetryPolicy() if (fault_plan is not None
+                              and not args.no_retry) else None
     server = WorkloadServer(queries, part, join_impl=args.join,
                             max_per_row=args.max_per_row or None,
                             mesh=mesh, dedup=not args.no_dedup,
                             adaptive=adaptive, backend=args.backend,
                             answer_cache=not args.no_cache,
-                            pipeline=pipeline_cfg, telemetry=telemetry)
+                            pipeline=pipeline_cfg, telemetry=telemetry,
+                            faults=fault_plan, retry=retry)
     print(f"{args.dataset}: {len(store):,} triples -> {part.n_shards} shards "
           f"{part.shard_sizes.tolist()} ({t_part:.1f}s partitioning), "
           f"{len(queries)} template queries in {server.n_buckets} buckets"
@@ -1250,98 +1698,126 @@ def main() -> None:
     print(f"  per-bucket collective counts (WawPart cuts): "
           f"{server.collective_counts()}")
 
-    # warm every (bucket, padded batch size) shape the stream will produce —
-    # serving throughput below is steady-state, compile-free (an adaptive
-    # migration recompiles only changed bucket signatures, mid-stream)
-    for i in range(0, len(stream), args.batch):
-        server.warmup(stream[i:i + args.batch])
-    if args.pipeline:
-        # deadline flushes cut partial batches: warm the small power-of-two
-        # batch shapes too, so a mid-stream flush never pays a compile
-        for n in (1, 2, 4, 8, 16, 32):
-            if n <= args.batch:
-                server.warmup(stream[:n])
-
-    if args.replicate:
-        rep = server.replicate_hot()
-        print(f"  replicated {rep['replicated_units']} unit copies "
-              f"({rep['replicated_triples']} triples), rewrote "
-              f"{rep['plans_rewritten']} plans; collectives "
-              f"{rep['collectives_before']} -> {rep['collectives_after']}")
-        for i in range(0, len(stream), args.batch):
-            server.warmup(stream[i:i + args.batch])
-
-    if args.metrics_out:
-        # per-bucket cost_analysis gauges ride along in the snapshot;
-        # engines are already compiled (warmup), lowering is cheap
-        server.record_engine_costs()
-
-    server.reset_stats()
     profile_ctx = nullcontext()
     if args.profile:
         import jax
         profile_ctx = jax.profiler.trace(args.profile)
-    with profile_ctx:
+    # warmup, the serving loop, and its report run under one try so an
+    # interrupt anywhere (compiles included) still drains gracefully and
+    # still emits the --trace-out/--metrics-out artifacts (the finally)
+    try:
+        # warm every (bucket, padded batch size) shape the stream will
+        # produce — serving throughput below is steady-state, compile-free
+        # (an adaptive migration recompiles only changed bucket signatures,
+        # mid-stream)
+        for i in range(0, len(stream), args.batch):
+            server.warmup(stream[i:i + args.batch])
         if args.pipeline:
-            dt, tickets = replay_paced(server, stream, args.arrival_ms / 1e3)
-            n_solutions = sum(t.result[1] for t in tickets)
-            overflows = sum(bool(t.result[2]) for t in tickets)
-            served = len(tickets)
-        else:
-            t0 = clock()
-            served = 0
-            n_solutions = 0
-            overflows = 0
-            while served < len(stream):
-                chunk = stream[served:served + args.batch]
-                for _, n, ovf in server.serve(chunk):
-                    n_solutions += n
-                    overflows += bool(ovf)
-                served += len(chunk)
-            dt = clock() - t0
+            # deadline flushes cut partial batches: warm the small power-
+            # of-two batch shapes too, so a mid-stream flush never pays a
+            # compile
+            for n in (1, 2, 4, 8, 16, 32):
+                if n <= args.batch:
+                    server.warmup(stream[:n])
 
-    print(f"served {served} requests in {dt*1e3:.1f} ms  "
-          f"({served/dt:,.0f} queries/sec, batch={args.batch})")
-    st = server.stats
-    per_epoch = "" if server.epoch else f" (<= {server.n_buckets} buckets)"
-    print(f"  solutions={n_solutions:,}  overflows={overflows}  "
-          f"compiled engines={server.n_compiles}{per_epoch}  "
-          f"dedup: {st['executed']}/{st['served']} instances executed")
-    if args.pipeline:
-        ls = server.latency_stats()
-        print(f"  latency: p50={ls['p50_ms']:.1f} p95={ls['p95_ms']:.1f} "
-              f"p99={ls['p99_ms']:.1f} mean={ls['mean_ms']:.1f} ms "
-              f"(arrival={args.arrival_ms}ms, deadline="
-              f"{args.deadline_ms or 'fill-only'}ms)")
-        print(f"  flushes: full={st['flush_full']} "
-              f"deadline={st['flush_deadline']} drain={st['flush_drain']}  "
-              f"queue_depth={server.queue_depth()} "
-              f"inflight={server.n_inflight}")
-    if st["cache_hits"] or st["cache_misses"]:
-        total = st["cache_hits"] + st["cache_misses"]
-        print(f"  answer cache: {st['cache_hits']}/{total} hits "
-              f"({st['cache_hits']/max(1, total):.0%})")
-    if server.adaptive is not None:
-        print(f"  adaptive: epoch={server.epoch}, "
-              f"{server.adaptive.n_migrations} migrations")
-        for ev in server.adaptive.events:
-            mig = ev.migration or {}
-            print(f"    [{ev.severity}] divergence={ev.divergence:.3f} "
-                  f"mode={ev.mode} moved={ev.moved_triples}"
-                  f"/{ev.budget_triples} budget, "
-                  f"cost {ev.cost_before:.0f}->{ev.cost_after:.0f}"
-                  + (f", rewrote {mig['plans_rewritten']} plans, "
-                     f"reused {mig['signatures_reused']} engine sigs"
-                     if mig else ""))
-    if args.trace_out:
-        telemetry.dump_trace(args.trace_out)
-        print(f"  trace: {len(telemetry.trace)} events "
-              f"({telemetry.trace.dropped} dropped) -> {args.trace_out}")
-    if args.metrics_out:
-        telemetry.dump_metrics(args.metrics_out)
-        print(f"  metrics snapshot -> {args.metrics_out}")
-    if args.profile:
-        print(f"  jax profiler trace -> {args.profile}")
+        if args.replicate:
+            rep = server.replicate_hot()
+            print(f"  replicated {rep['replicated_units']} unit copies "
+                  f"({rep['replicated_triples']} triples), rewrote "
+                  f"{rep['plans_rewritten']} plans; collectives "
+                  f"{rep['collectives_before']} -> "
+                  f"{rep['collectives_after']}")
+            for i in range(0, len(stream), args.batch):
+                server.warmup(stream[i:i + args.batch])
+
+        if args.metrics_out:
+            # per-bucket cost_analysis gauges ride along in the snapshot;
+            # engines are already compiled (warmup), lowering is cheap
+            server.record_engine_costs()
+
+        server.reset_stats()
+        with profile_ctx:
+            if args.pipeline:
+                dt, tickets = replay_paced(server, stream,
+                                           args.arrival_ms / 1e3)
+                answered = [t for t in tickets if t.error is None]
+                n_solutions = sum(t.result[1] for t in answered)
+                overflows = sum(bool(t.result[2]) for t in answered)
+                served = len(tickets)
+            else:
+                t0 = clock()
+                served = 0
+                n_solutions = 0
+                overflows = 0
+                while served < len(stream):
+                    chunk = stream[served:served + args.batch]
+                    for res in server.serve(chunk):
+                        if res is None:     # shed with a typed error
+                            continue
+                        n_solutions += res[1]
+                        overflows += bool(res[2])
+                    served += len(chunk)
+                dt = clock() - t0
+
+        print(f"served {served} requests in {dt*1e3:.1f} ms  "
+              f"({served/dt:,.0f} queries/sec, batch={args.batch})")
+        st = server.stats
+        per_epoch = "" if server.epoch \
+            else f" (<= {server.n_buckets} buckets)"
+        print(f"  solutions={n_solutions:,}  overflows={overflows}  "
+              f"compiled engines={server.n_compiles}{per_epoch}  "
+              f"dedup: {st['executed']}/{st['served']} instances executed")
+        if args.pipeline:
+            ls = server.latency_stats()
+            print(f"  latency: p50={ls['p50_ms']:.1f} p95={ls['p95_ms']:.1f} "
+                  f"p99={ls['p99_ms']:.1f} mean={ls['mean_ms']:.1f} ms "
+                  f"(arrival={args.arrival_ms}ms, deadline="
+                  f"{args.deadline_ms or 'fill-only'}ms)")
+            print(f"  flushes: full={st['flush_full']} "
+                  f"deadline={st['flush_deadline']} "
+                  f"drain={st['flush_drain']}  "
+                  f"queue_depth={server.queue_depth()} "
+                  f"inflight={server.n_inflight}")
+        if server.faults is not None and server.faults.enabled:
+            inj = server.faults.injected
+            print(f"  chaos: injected dispatch_failures={inj['dispatch']} "
+                  f"shard_down={inj['shard_down']}; recovered "
+                  f"retries={st['retries']} shed={st['shed']} "
+                  f"timeouts={st['timeouts']} "
+                  f"degraded_served={st['degraded_served']}")
+        if st["cache_hits"] or st["cache_misses"]:
+            total = st["cache_hits"] + st["cache_misses"]
+            print(f"  answer cache: {st['cache_hits']}/{total} hits "
+                  f"({st['cache_hits']/max(1, total):.0%})")
+        if server.adaptive is not None:
+            print(f"  adaptive: epoch={server.epoch}, "
+                  f"{server.adaptive.n_migrations} migrations")
+            for ev in server.adaptive.events:
+                mig = ev.migration or {}
+                print(f"    [{ev.severity}] divergence={ev.divergence:.3f} "
+                      f"mode={ev.mode} moved={ev.moved_triples}"
+                      f"/{ev.budget_triples} budget, "
+                      f"cost {ev.cost_before:.0f}->{ev.cost_after:.0f}"
+                      + (f", rewrote {mig['plans_rewritten']} plans, "
+                         f"reused {mig['signatures_reused']} engine sigs"
+                         if mig else ""))
+    except (KeyboardInterrupt, SystemExit):
+        out = server.shutdown(args.grace_ms / 1e3)
+        st = server.stats
+        print(f"\ninterrupted: drained {out['drained']} and shed "
+              f"{out['shed']} queued requests within the "
+              f"{args.grace_ms:g} ms grace budget; "
+              f"served={st['served']} total")
+    finally:
+        if args.trace_out:
+            telemetry.dump_trace(args.trace_out)
+            print(f"  trace: {len(telemetry.trace)} events "
+                  f"({telemetry.trace.dropped} dropped) -> {args.trace_out}")
+        if args.metrics_out:
+            telemetry.dump_metrics(args.metrics_out)
+            print(f"  metrics snapshot -> {args.metrics_out}")
+        if args.profile:
+            print(f"  jax profiler trace -> {args.profile}")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,22 @@ SERVING_SCHEMA: tuple[tuple, ...] = (
     ("drift_checks", "counter", ("severity",),
      "Drift verdicts by severity (none | incremental | full)."),
     ("epoch_bumps", "counter", ("kind",),
-     "Serving-state swaps by kind (migrate | replicate)."),
+     "Serving-state swaps by kind (migrate | replicate | degrade | "
+     "restore)."),
+    ("retries", "counter", ("bucket",),
+     "Tickets re-enqueued after a transient dispatch failure."),
+    ("timeouts", "counter", ("template",),
+     "Tickets resolved as errors past their absolute retry deadline."),
+    ("shed", "counter", ("template",),
+     "Tickets resolved with a typed error instead of an answer."),
+    ("degraded_served", "counter", ("template",),
+     "Requests served exactly from re-homed replicas while degraded."),
+    ("shard_down", "counter", ("shard",),
+     "Shard-down windows entered (degraded-mode activations)."),
+    ("migration_aborts", "counter", (),
+     "migrate() prepare phases rolled back before the epoch swap."),
+    ("engine_cache_evictions", "counter", (),
+     "Compiled engines evicted from the LRU-capped EngineCache."),
     ("queue_depth", "gauge", ("bucket",),
      "Tickets currently queued per bucket (set on enqueue/flush)."),
     ("inflight", "gauge", (),
@@ -176,8 +191,10 @@ class Telemetry:
         """Enforce the docs/architecture.md counter invariants.
 
         Raises `RuntimeError` if `served != cache_hits + executed +
-        deduped` (every served request is answered exactly one way) or
-        any counter total is negative.
+        deduped + shed` (every served request is answered exactly one
+        way — or rejected with exactly one typed error), if a timeout
+        was counted without a matching shed, or if any counter total is
+        negative.
         """
         totals = {n: self.total(n) for n in COUNTER_NAMES}
         negative = [n for n, v in totals.items() if v < 0]
@@ -186,12 +203,17 @@ class Telemetry:
                                f"{negative}")
         lhs = totals["served"]
         rhs = (totals["cache_hits"] + totals["executed"]
-               + totals["deduped"])
+               + totals["deduped"] + totals["shed"])
         if lhs != rhs:
             raise RuntimeError(
                 "telemetry invariant violated: served == cache_hits + "
-                f"executed + deduped ({lhs} != {totals['cache_hits']} + "
-                f"{totals['executed']} + {totals['deduped']})")
+                f"executed + deduped + shed ({lhs} != "
+                f"{totals['cache_hits']} + {totals['executed']} + "
+                f"{totals['deduped']} + {totals['shed']})")
+        if totals["timeouts"] > totals["shed"]:
+            raise RuntimeError(
+                "telemetry invariant violated: every timeout is a shed "
+                f"({totals['timeouts']} timeouts > {totals['shed']} shed)")
 
 
 @contextmanager

@@ -378,6 +378,110 @@ print("PIPELINE_SHARD_MAP_OK")
 """
 
 
+SCRIPT_FAULTS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.adaptive.repartition import incremental_repartition
+from repro.core.partitioner import wawpart_partition
+from repro.faults import (FaultInjector, FaultPlan, MigrationAbortedError,
+                          RetryPolicy, ShardDownError)
+from repro.kg.generator import generate_lubm
+from repro.kg.workloads import lubm_queries
+from repro.launch.mesh import make_engine_mesh
+from repro.launch.serve import (WorkloadServer, request_stream,
+                                two_phase_weights)
+
+# fault tolerance on a real mesh (ISSUE-10 acceptance, shard_map half):
+# degraded mode re-plans around a down shard and the shard_map engines
+# must still produce bit-identical answers for every replica-covered
+# template; a mid-prepare migration abort must leave the old epoch
+# serving with no ticket lost or duplicated
+store = generate_lubm(1, scale=0.08, seed=0)
+qs = lubm_queries()
+part = wawpart_partition(store, qs, n_shards=3)
+stream = request_stream(qs, 28)
+want = WorkloadServer(qs, part, answer_cache=False).serve(stream)
+
+sm = WorkloadServer(qs, part, mesh=make_engine_mesh(3), answer_cache=False)
+sm.replicate_hot()            # spare replica capacity for failover
+healthy = sm.serve(stream)
+for (a, na, ova), (b, nb, ovb) in zip(want, healthy):
+    assert na == nb and ova == ovb and np.array_equal(a, b)
+
+# injected dispatch failures retry to bit-identical results on the mesh
+chaos = WorkloadServer(qs, sm.part, mesh=make_engine_mesh(3),
+                       answer_cache=False, cache=sm.cache,
+                       faults=FaultPlan(seed=2, dispatch_fail_rate=0.4),
+                       retry=RetryPolicy(max_attempts=8))
+for (a, na, ova), (b, nb, ovb) in zip(want, chaos.serve(stream)):
+    assert na == nb and ova == ovb and np.array_equal(a, b)
+assert chaos.faults.injected["dispatch"] > 0
+assert chaos.stats["retries"] > 0 and chaos.stats["shed"] == 0
+
+# degraded window: covered templates exact, uncovered typed rejections
+down = 1
+rep = sm.mark_shard_down(down)
+shed = set(rep["shed_templates"])
+tickets = [sm.submit(n, p, _pump=False) for n, p in stream]
+sm.drain()
+for (name, _), (a, na, ova), t in zip(stream, want, tickets):
+    if name in shed:
+        assert t.result is None and isinstance(t.error, ShardDownError)
+    else:
+        rows, cnt, ovf = t.result
+        assert cnt == na and bool(ovf) == bool(ova), name
+        assert np.array_equal(rows, a), name
+assert sm.stats["shard_down"] == 1
+served = sm.stats["served"]
+split = (sm.stats["cache_hits"] + sm.stats["executed"]
+         + sm.stats["deduped"] + sm.stats["shed"])
+assert served == split, (served, split)
+
+# migration is refused while degraded (the refusal fires before prepare,
+# so even a same-placement target raises); restore serves bit-identical
+try:
+    sm.migrate(sm.part)
+    raise SystemExit("migrate while degraded did not raise")
+except MigrationAbortedError:
+    pass
+sm.mark_shard_up()
+for (a, na, ova), (b, nb, ovb) in zip(want, sm.serve(stream)):
+    assert na == nb and ova == ovb and np.array_equal(a, b)
+
+# injected abort mid-prepare on a fresh mesh server (the SCRIPT_MIGRATE
+# placement pair): rollback keeps the old epoch serving, queued tickets
+# cross the aborted swap with nothing lost or duplicated
+wa, wb = two_phase_weights(qs)
+res = incremental_repartition(part, qs, wb, budget_frac=0.15)
+assert res.mode == "incremental", res.mode
+mg = WorkloadServer(qs, part, mesh=make_engine_mesh(3), answer_cache=False,
+                    cache=sm.cache, faults=FaultPlan(abort_migrations=1))
+queued = [mg.submit(n, p, _pump=False) for n, p in stream]
+try:
+    mg.migrate(res.part)
+    raise SystemExit("injected migration abort did not raise")
+except MigrationAbortedError:
+    pass
+assert mg.epoch == 0                           # rollback: no swap
+assert mg.stats["migration_aborts"] == 1
+assert mg.queue_depth() == len(stream)         # no ticket lost
+mg.drain()
+for (a, na, ova), t in zip(want, queued):
+    assert t.error is None
+    rows, cnt, ovf = t.result
+    assert cnt == na and bool(ovf) == bool(ova)
+    assert np.array_equal(rows, a)
+
+# the abort budget is spent: the same migration commits on the mesh
+mig = mg.migrate(res.part)
+assert mg.epoch == mig["epoch"] == 1
+for (a, na, ova), (b, nb, ovb) in zip(want, mg.serve(stream)):
+    assert na == nb and ova == ovb and np.array_equal(a, b)
+print("FAULTS_SHARD_MAP_OK")
+"""
+
+
 @pytest.mark.parametrize("script,token", [
     (SCRIPT_DIFF, "BATCH_SHARD_MAP_OK"),
     (SCRIPT_SERVER, "SERVER_SHARD_MAP_OK"),
@@ -385,6 +489,7 @@ print("PIPELINE_SHARD_MAP_OK")
     (SCRIPT_PALLAS, "PALLAS_SHARD_MAP_OK"),
     (SCRIPT_REPLICATE, "REPLICATE_SHARD_MAP_OK"),
     (SCRIPT_PIPELINE, "PIPELINE_SHARD_MAP_OK"),
+    (SCRIPT_FAULTS, "FAULTS_SHARD_MAP_OK"),
 ])
 def test_batch_shard_map(script, token):
     env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}

@@ -7,11 +7,12 @@ Checks:
      sharing an id on a ``ticket/...`` name) — the request-lifecycle
      signal Perfetto renders;
   2. with ``--require-instant NAME``, an instant event (``ph`` "i") of
-     that name exists (e.g. ``migration`` for an adaptive run);
+     that name exists (e.g. ``migration`` for an adaptive run,
+     ``shard_down``/``shard_up``/``dispatch_fault`` for a chaos run);
   3. the metrics snapshot (optional second argument) declares the
      ``cut_collectives`` gauge with at least one per-bucket series and
      its counter totals satisfy the documented invariant
-     ``served == cache_hits + executed + deduped``.
+     ``served == cache_hits + executed + deduped + shed``.
 
 Run: ``python tools/check_trace.py TRACE.json [METRICS.json]
 [--require-instant migration]``.
@@ -78,10 +79,11 @@ def check_metrics(path: str) -> list[str]:
     served = _counter_total(snap, "served")
     split = (_counter_total(snap, "cache_hits")
              + _counter_total(snap, "executed")
-             + _counter_total(snap, "deduped"))
+             + _counter_total(snap, "deduped")
+             + _counter_total(snap, "shed"))
     if served != split:
         errors.append(f"{path}: counter invariant broken: served={served} "
-                      f"!= cache_hits+executed+deduped={split}")
+                      f"!= cache_hits+executed+deduped+shed={split}")
     if served <= 0:
         errors.append(f"{path}: no served requests recorded")
     if not errors:
